@@ -1,0 +1,89 @@
+"""Render the §Roofline table from the dry-run sweep reports
+(reports/dryrun/*.json). Single-pod cells only, per the deliverable; the
+multi-pod passes prove lowering and are summarized separately."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.configs import ASSIGNED_ARCHS, SHAPES
+
+COLS = ("t_compute_ms", "t_memory_ms", "t_collective_ms")
+
+
+def load_reports(report_dir: str = "reports/dryrun") -> dict:
+    out = {}
+    for f in Path(report_dir).glob("*.json"):
+        if f.name == "summary.json":
+            continue
+        try:
+            out[f.stem] = json.loads(f.read_text())
+        except Exception:
+            pass
+    return out
+
+
+def cell_records(reports: dict, arch_id: str, shape: str):
+    """(cost_record, memory_record): costs from the unrolled pass
+    (trip-count-true), memory/fits from the scanned pass (the production
+    program)."""
+    unr = reports.get(f"{arch_id}__{shape}__sp__unroll")
+    scan = reports.get(f"{arch_id}__{shape}__sp")
+    cost = unr if (unr and unr.get("ok") and not unr.get("skipped")) else scan
+    return cost, scan
+
+
+def table(report_dir: str = "reports/dryrun") -> dict:
+    reports = load_reports(report_dir)
+    rows, skips, fails = [], [], []
+    for arch in ASSIGNED_ARCHS:
+        for shape in SHAPES:
+            cost, scan = cell_records(reports, arch, shape)
+            rep = cost or scan
+            if rep is None:
+                fails.append((arch, shape, "missing"))
+                continue
+            if rep.get("skipped"):
+                skips.append((arch, shape, rep.get("reason", "")))
+                continue
+            if not rep.get("ok"):
+                fails.append((arch, shape, rep.get("error", "?")[:80]))
+                continue
+            r = rep["roofline"]
+            mem = (scan or rep).get("memory", rep.get("memory", {}))
+            rows.append({
+                "arch": arch, "shape": shape, "mode": rep.get("mode", "?"),
+                "t_compute_ms": round(r["t_compute_ms"], 3),
+                "t_memory_ms": round(r["t_memory_ms"], 3),
+                "t_collective_ms": round(r["t_collective_ms"], 3),
+                "dominant": r["dominant"],
+                "useful_pct": round(100 * r["useful_frac"], 1),
+                "roofline_pct": round(100 * r["roofline_frac"], 2),
+                "mem_gb": round(mem.get("per_chip_gb", float("nan")), 2),
+                "fits": mem.get("fits_16gb"),
+            })
+    return {"rows": rows, "skips": skips, "fails": fails}
+
+
+def markdown(report_dir: str = "reports/dryrun") -> str:
+    t = table(report_dir)
+    lines = ["| arch | shape | t_comp ms | t_mem ms | t_coll ms | bound | "
+             "useful% | roofline% | GB/chip | fits |",
+             "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in t["rows"]:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_ms']} | "
+            f"{r['t_memory_ms']} | {r['t_collective_ms']} | {r['dominant']} |"
+            f" {r['useful_pct']} | {r['roofline_pct']} | {r['mem_gb']} | "
+            f"{'y' if r['fits'] else 'N'} |")
+    for a, s, reason in t["skips"]:
+        lines.append(f"| {a} | {s} | — | — | — | skipped | — | — | — | — |")
+    if t["fails"]:
+        lines.append("")
+        lines.append("Failures: " + "; ".join(
+            f"{a}x{s}: {e}" for a, s, e in t["fails"]))
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(markdown())

@@ -1,0 +1,87 @@
+"""Benchmark harness entry point: one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--skip-slow] [--json out.json]
+
+Emits ``name,metric,value`` CSV lines plus a JSON dump.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+
+def _flatten(prefix: str, obj, rows: list):
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            _flatten(f"{prefix}.{k}" if prefix else str(k), v, rows)
+    elif isinstance(obj, (int, float, bool)):
+        rows.append((prefix, obj))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--skip-slow", action="store_true",
+                    help="skip table1 (trains a small model)")
+    ap.add_argument("--json", default="reports/bench.json")
+    ap.add_argument("--reports", default="reports/dryrun",
+                    help="dry-run report dir for the roofline table")
+    args = ap.parse_args(argv)
+
+    from benchmarks import paper_figures as pf
+
+    benches = [
+        ("fig7a_context_sweep", pf.fig7a_context_sweep),
+        ("fig7b_speedup", pf.fig7b_speedup),
+        ("lut_exp_error", pf.lut_exp_error),
+        ("fxp_attention_precision", pf.fxp_attention_precision),
+        ("fig8a_breakdown", pf.fig8a_breakdown),
+        ("table3_tokens_per_s", pf.table3_tokens_per_s),
+    ]
+    if not args.skip_slow:
+        benches.append(("table1_topk_agreement", pf.table1_topk_agreement))
+
+    results, failures = {}, []
+    for name, fn in benches:
+        t0 = time.perf_counter()
+        try:
+            results[name] = fn()
+            results[name]["_wall_s"] = round(time.perf_counter() - t0, 2)
+            status = "ok"
+        except Exception as e:  # pragma: no cover
+            failures.append(name)
+            results[name] = {"error": f"{type(e).__name__}: {e}"}
+            status = "FAIL"
+        print(f"[{status}] {name} ({results[name].get('_wall_s', '-')}s)")
+
+    # roofline table from the dry-run sweep, if reports exist
+    try:
+        from benchmarks import roofline_table
+        md = roofline_table.markdown(args.reports)
+        results["roofline_table"] = {"markdown": md}
+        print("\n=== Roofline (single-pod baselines) ===")
+        print(md)
+    except Exception as e:
+        print(f"[skip] roofline table: {e}")
+
+    print("\n=== CSV ===")
+    print("name,metric,value")
+    for name, res in results.items():
+        rows: list = []
+        _flatten("", res, rows)
+        for metric, value in rows:
+            if metric.startswith("_") or metric == "markdown":
+                continue
+            print(f"{name},{metric},{value}")
+
+    out = Path(args.json)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(results, indent=1, default=str))
+    print(f"\nwrote {out}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

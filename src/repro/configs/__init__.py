@@ -1,0 +1,47 @@
+"""Config registry: the 10 assigned architectures + the paper's own two models
+(LLaMA2-7B, ChatGLM-6B). ``get_config(name, reduced=True)`` returns the
+smoke-test-sized variant of the same family."""
+from __future__ import annotations
+
+import importlib
+
+from repro.models.config import SHAPES, ModelConfig, ShapeSpec, shape_applicable
+
+ARCH_IDS = [
+    "hymba_1p5b", "llama32_vision_90b", "llama4_scout_17b_16e", "olmoe_1b_7b",
+    "qwen3_8b", "h2o_danube_1p8b", "gemma_2b", "mistral_nemo_12b",
+    "rwkv6_3b", "whisper_small",
+    # paper's evaluation models
+    "llama2_7b", "chatglm_6b",
+]
+
+ASSIGNED_ARCHS = ARCH_IDS[:10]
+
+_ALIAS = {
+    "hymba-1.5b": "hymba_1p5b",
+    "llama-3.2-vision-90b": "llama32_vision_90b",
+    "llama4-scout-17b-a16e": "llama4_scout_17b_16e",
+    "olmoe-1b-7b": "olmoe_1b_7b",
+    "qwen3-8b": "qwen3_8b",
+    "h2o-danube-1.8b": "h2o_danube_1p8b",
+    "gemma-2b": "gemma_2b",
+    "mistral-nemo-12b": "mistral_nemo_12b",
+    "rwkv6-3b": "rwkv6_3b",
+    "whisper-small": "whisper_small",
+    "llama2-7b": "llama2_7b",
+    "chatglm-6b": "chatglm_6b",
+}
+
+
+def get_config(name: str, reduced: bool = False) -> ModelConfig:
+    mod_name = _ALIAS.get(name, name.replace("-", "_").replace(".", "p"))
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.REDUCED if reduced else mod.CONFIG
+
+
+def all_configs(reduced: bool = False) -> dict[str, ModelConfig]:
+    return {a: get_config(a, reduced) for a in ARCH_IDS}
+
+
+__all__ = ["ARCH_IDS", "ASSIGNED_ARCHS", "SHAPES", "ModelConfig", "ShapeSpec",
+           "get_config", "all_configs", "shape_applicable"]

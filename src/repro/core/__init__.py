@@ -1,0 +1,13 @@
+"""Core SwiftKV algorithms (paper Eqs. 5-11) and supporting numerics."""
+from . import attention, exp2_lut, fixedpoint, quantization, rope, swiftkv
+from .swiftkv import (NEG_INF, SwiftKVState, softmax_attention_reference,
+                      state_finalize, state_init, state_merge,
+                      state_update_block, swiftkv_decode_blockwise,
+                      swiftkv_decode_tokenwise)
+
+__all__ = [
+    "attention", "exp2_lut", "fixedpoint", "quantization", "rope", "swiftkv",
+    "NEG_INF", "SwiftKVState", "softmax_attention_reference", "state_finalize",
+    "state_init", "state_merge", "state_update_block",
+    "swiftkv_decode_blockwise", "swiftkv_decode_tokenwise",
+]

@@ -1,0 +1,225 @@
+"""Batched multi-head attention built on the SwiftKV primitives.
+
+Two entry points used by every model:
+
+  * ``decode_attention``  — one new token against a KV cache (the paper's
+    target workload). GQA/MQA-aware; dispatches between the paper-faithful
+    tokenwise scan, the blockwise TPU form, and the Pallas kernel.
+  * ``prefill_attention`` — multi-token self/cross attention as a *single-pass
+    blockwise* scan over KV blocks using the same ``(mu, Z, Y)`` recurrence
+    (flash-style, no S x S score materialization), so 32k-token prefill lowers
+    with O(S·D) live memory.
+
+Layouts: activations ``[B, S, H, D]``; KV caches ``[B, S, Hkv, D]``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from . import swiftkv
+from .swiftkv import NEG_INF, SwiftKVState, state_init, state_update_block, state_finalize
+
+DecodeImpl = Literal["tokenwise", "blockwise", "kernel", "naive", "sp"]
+
+
+# ---------------------------------------------------------------------------
+# Decode (one query token per sequence)
+# ---------------------------------------------------------------------------
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     lengths: jax.Array, *, impl: DecodeImpl = "blockwise",
+                     window: int | None = None, block_size: int = 512,
+                     scale: float | None = None) -> jax.Array:
+    """q: [B, Hq, D]; k_cache/v_cache: [B, S, Hkv, D]; lengths: [B] int32.
+    Returns [B, Hq, D]. Hq must be a multiple of Hkv (GQA groups)."""
+    b, hq, d = q.shape
+    hkv = k_cache.shape[2]
+    assert hq % hkv == 0, (hq, hkv)
+    g = hq // hkv
+
+    if impl == "sp":
+        # sequence-parallel monoid-merge decode: the KV cache stays
+        # seq-sharded over the model axis; each shard folds its slice with
+        # the single-pass recurrence and the partial (mu, Z, Y) triples merge
+        # with one tiny collective (exact — DESIGN.md §2). Falls back to
+        # blockwise outside a mesh context or on non-divisible caches.
+        from repro.distributed.context import get_context
+        ctx = get_context()
+        s_len = k_cache.shape[1]
+        if (ctx.active and ctx.model_axis is not None
+                and s_len % ctx.axis_size(ctx.model_axis) == 0):
+            from repro.distributed.sp_attention import decode_attention_sp
+            return decode_attention_sp(
+                q, k_cache, v_cache, lengths, mesh=ctx.mesh,
+                seq_axes=ctx.model_axis, window=window,
+                block_size=min(block_size,
+                               s_len // ctx.axis_size(ctx.model_axis)),
+                scale=scale)
+        impl = "blockwise"
+
+    if impl == "kernel":
+        from repro.kernels.swiftkv_decode import ops as kops
+        return kops.swiftkv_decode(q, k_cache, v_cache, lengths,
+                                   window=window, block_k=block_size, scale=scale)
+
+    # group queries: [B, Hkv, G, D]; caches to [B, Hkv, S, D]
+    qg = q.reshape(b, hkv, g, d)
+    kc = jnp.swapaxes(k_cache, 1, 2)
+    vc = jnp.swapaxes(v_cache, 1, 2)
+
+    if impl == "tokenwise":
+        fn = functools.partial(swiftkv.swiftkv_decode_tokenwise, scale=scale)
+        if window is not None:
+            raise NotImplementedError("tokenwise path: use blockwise for SWA")
+    elif impl == "blockwise":
+        fn = functools.partial(swiftkv.swiftkv_decode_blockwise, scale=scale,
+                               window=window, block_size=block_size)
+    elif impl == "naive":
+        fn = functools.partial(swiftkv.softmax_attention_reference, scale=scale,
+                               window=window)
+    else:
+        raise ValueError(impl)
+
+    # vmap: queries within a group share one KV scan (in_axes k/v None)
+    per_group = jax.vmap(fn, in_axes=(0, None, None, None))      # over G
+    per_head = jax.vmap(per_group, in_axes=(0, 0, 0, None))      # over Hkv
+    per_batch = jax.vmap(per_head, in_axes=(0, 0, 0, 0))         # over B
+    out = per_batch(qg, kc, vc, lengths)                          # [B, Hkv, G, D]
+    return out.reshape(b, hq, d)
+
+
+def decode_attention_ring(q: jax.Array, k_cache: jax.Array,
+                          v_cache: jax.Array, lengths: jax.Array, *,
+                          window: int, scale: float | None = None) -> jax.Array:
+    """Sliding-window decode over a RING KV cache (beyond-paper).
+
+    q: [B, Hq, D]; k/v_cache: [B, R, Hkv, D] with R >= window+1 ring slots;
+    ``lengths``: tokens seen so far (the newest token lives at slot
+    (lengths-1) % R). Slot s holds absolute position p - ((p - s) mod R)
+    where p = lengths-1; a slot is attended iff its position is in
+    [lengths-window, lengths). R is ~window, independent of context, so a
+    500k-token decode reads ~window KV entries per step — the exactly-once
+    property with an O(window) working set."""
+    b, hq, d = q.shape
+    r, hkv = k_cache.shape[1], k_cache.shape[2]
+    g = hq // hkv
+    scale = (1.0 / d ** 0.5) if scale is None else scale
+
+    p = (lengths - 1)[:, None]                            # [B, 1]
+    s = jnp.arange(r)[None, :]                            # [1, R]
+    pos = p - jnp.mod(p - s, r)                           # [B, R] absolute
+    valid = (pos >= 0) & (pos > p - window)               # in-window slots
+
+    qg = q.reshape(b, hkv, g, d).astype(jnp.float32)
+    kc = k_cache.astype(jnp.float32)
+    vc = v_cache.astype(jnp.float32)
+    sc = jnp.einsum("bhgd,bshd->bhgs", qg, kc) * scale    # [B,Hkv,G,R]
+    sc = jnp.where(valid[:, None, None, :], sc, NEG_INF)
+    pr = jax.nn.softmax(sc, axis=-1)
+    pr = jnp.where(valid[:, None, None, :], pr, 0.0)
+    out = jnp.einsum("bhgs,bshd->bhgd", pr, vc)
+    return out.reshape(b, hq, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Prefill (blockwise single-pass over KV; SwiftKV state per query row)
+# ---------------------------------------------------------------------------
+
+def _heads_constrain(x: jax.Array):
+    """Pin [B, H, ...] activations to (batch over DP axes, heads over the
+    model axis) — the TPU analogue of the paper's one-head-per-processor
+    layout. Without it the reshape chain around GQA grouping loses the head
+    sharding and every chip materializes all-head score tensors."""
+    from repro.distributed.context import get_context
+    ctx = get_context()
+    if not ctx.active:
+        return x
+    bd = ctx.batch_axes if x.shape[0] % ctx.axis_size(ctx.batch_axes) == 0 \
+        else None
+    h_ax = ctx.model_axis if x.shape[1] % ctx.axis_size(ctx.model_axis) == 0 \
+        else None
+    try:
+        from jax.sharding import PartitionSpec as P
+        return jax.lax.with_sharding_constraint(
+            x, P(bd, h_ax, *([None] * (x.ndim - 2))))
+    except Exception:
+        return x
+
+
+def prefill_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool = True, window: int | None = None,
+                      kv_lengths: jax.Array | None = None,
+                      q_offset: jax.Array | None = None,
+                      kv_block: int = 512, scale: float | None = None) -> jax.Array:
+    """q: [B, Sq, Hq, D]; k, v: [B, Skv, Hkv, D] -> [B, Sq, Hq, D].
+
+    Single pass over KV blocks with the SwiftKV ``(mu, Z, Y)`` state per
+    query row (flash-style; no Sq x Skv score materialization). GQA KV heads
+    are repeated to the full query-head count so the head axis stays
+    TP-shardable (Hkv < TP cannot be expressed through the grouped layout);
+    each KV-block step is rematted, so backward recomputes scores blockwise
+    instead of saving every block's score tensor.
+
+    ``kv_lengths``: [B] valid KV prefix (cross-attention padding / appended
+    decode). ``q_offset``: [B] absolute position of q row 0 (0 for prefill)."""
+    b, sq, hq, d = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    scale = (1.0 / (d ** 0.5)) if scale is None else scale
+    kv_lengths = jnp.full((b,), skv, jnp.int32) if kv_lengths is None else kv_lengths
+    q_offset = jnp.zeros((b,), jnp.int32) if q_offset is None else q_offset
+
+    qh = _heads_constrain(jnp.swapaxes(q, 1, 2))       # [B, Hq, Sq, D]
+    kh = jnp.swapaxes(k, 1, 2)                          # [B, Hkv, Skv, D]
+    vh = jnp.swapaxes(v, 1, 2)
+    if g > 1:                                           # repeat KV to q heads
+        kh = jnp.repeat(kh, g, axis=1)
+        vh = jnp.repeat(vh, g, axis=1)
+    kh = _heads_constrain(kh)
+    vh = _heads_constrain(vh)
+
+    n_blocks = -(-skv // kv_block)
+    pad = n_blocks * kv_block - skv
+    if pad:
+        kh = jnp.pad(kh, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        vh = jnp.pad(vh, ((0, 0), (0, 0), (0, pad), (0, 0)))
+
+    qf = qh.astype(jnp.float32) * scale
+    pos_q = q_offset[:, None] + jnp.arange(sq)[None]    # [B, Sq]
+
+    def step(state, j):
+        k_blk = jax.lax.dynamic_slice_in_dim(kh, j * kv_block, kv_block,
+                                             axis=2).astype(jnp.float32)
+        v_blk = jax.lax.dynamic_slice_in_dim(vh, j * kv_block, kv_block,
+                                             axis=2).astype(jnp.float32)
+        pos_k = j * kv_block + jnp.arange(kv_block)     # [Bk]
+        s = jnp.einsum("bhqd,bhkd->bhqk", qf, k_blk)    # [B, H, Sq, Bk]
+        valid = pos_k[None, None, :] < kv_lengths[:, None, None]  # [B, 1, Bk]
+        valid = jnp.broadcast_to(valid, (b, sq, kv_block))
+        if causal:
+            valid &= pos_k[None, None, :] <= pos_q[:, :, None]
+        if window is not None:
+            valid &= pos_k[None, None, :] > pos_q[:, :, None] - window
+        valid = valid[:, None]                           # [B, 1, Sq, Bk]
+        s = jnp.where(valid, s, NEG_INF)
+        mu, z, y = state
+        mu_blk = jnp.max(s, axis=-1)
+        mu_new = jnp.maximum(mu, mu_blk)
+        alpha = jnp.exp(mu - mu_new)
+        p = jnp.exp(s - mu_new[..., None]) * valid       # [B, H, Sq, Bk]
+        z_new = alpha * z + jnp.sum(p, axis=-1)
+        y_new = (alpha[..., None] * y
+                 + jnp.einsum("bhqk,bhkd->bhqd", p, v_blk))
+        return SwiftKVState(mu=mu_new, z=z_new, y=y_new), None
+
+    init = state_init(d, batch_shape=(b, hq, sq))
+    # remat each block step: backward recomputes the [B,H,Sq,Bk] scores
+    # per block instead of saving n_blocks of them
+    state, _ = jax.lax.scan(jax.checkpoint(step), init,
+                            jnp.arange(n_blocks))
+    out = state_finalize(state).astype(q.dtype)          # [B, Hq, Sq, D]
+    return jnp.swapaxes(out, 1, 2)

@@ -1,0 +1,119 @@
+"""W4A8 quantization (paper §IV-B): INT4 weights x INT8 activations -> INT32
+partial sums, rescaled to higher precision between ops.
+
+Weights: symmetric *group-wise* int4 in [-8, 7] — one f32 scale per
+(128-input-channel group, output channel) — packed two nibbles per uint8
+along the output axis. Group-wise scales are what make int4 weights hit the
+paper's Table-I token agreement; plain per-channel int4 loses ~14% relative
+error on d~1k matmuls, group-128 gets ~3-4%. Activations: symmetric per-token
+dynamic int8. The Pallas kernel (kernels/gemv_w4a8) consumes the packed form;
+this module is the quantizer + the pure-jnp reference semantics.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+GROUP = 128  # input channels per quantization group
+
+
+class QuantizedLinear(NamedTuple):
+    """Packed W4 weight for a [K, N] linear layer."""
+    packed: jax.Array   # [K, N//2] uint8 — two int4 output-channels per byte
+    scale: jax.Array    # [K//GROUP, N] f32 per-(group, out-channel) scale
+    bias: jax.Array | None
+
+
+_CLIP_CANDIDATES = (0.7, 0.8, 0.85, 0.9, 1.0)
+
+
+def quantize_w4(w: jax.Array, group: int = GROUP) -> QuantizedLinear:
+    """w: [K, N] float -> group-wise symmetric int4, packed along N.
+
+    Per-group MSE search over clip factors: pure min-max scaling is
+    MSE-suboptimal for bell-shaped weights (~12% rel err on gaussians);
+    clipping the range to ~0.85 x amax trades saturation for resolution
+    (~10.5%, the RTN-int4 floor)."""
+    k, n = w.shape
+    assert n % 2 == 0, "output dim must be even to pack nibbles"
+    pad_k = (-k) % group
+    if pad_k:
+        w = jnp.pad(w, ((0, pad_k), (0, 0)))
+    kp = w.shape[0]
+    wg = w.reshape(kp // group, group, n)
+    amax = jnp.max(jnp.abs(wg), axis=1)                   # [K/G, N]
+
+    best_scale, best_err = None, None
+    for c in _CLIP_CANDIDATES:
+        s = jnp.where(amax > 0, c * amax / 7.0, 1.0).astype(jnp.float32)
+        qc = jnp.clip(jnp.round(wg / s[:, None, :]), -8, 7)
+        err = jnp.sum((qc * s[:, None, :] - wg) ** 2, axis=1)   # [K/G, N]
+        if best_err is None:
+            best_scale, best_err = s, err
+        else:
+            pick = err < best_err
+            best_scale = jnp.where(pick, s, best_scale)
+            best_err = jnp.minimum(err, best_err)
+
+    scale = best_scale
+    q = jnp.clip(jnp.round(wg / scale[:, None, :]), -8, 7)
+    q = q.reshape(kp, n)[:k].astype(jnp.int8)
+    lo = q[:, 0::2].astype(jnp.uint8) & 0xF
+    hi = (q[:, 1::2].astype(jnp.uint8) & 0xF) << 4
+    return QuantizedLinear(packed=lo | hi, scale=scale, bias=None)
+
+
+def unpack_w4(packed: jax.Array) -> jax.Array:
+    """[K, N//2] uint8 -> [K, N] int8 in [-8, 7] (sign-extended nibbles)."""
+    lo = (packed & 0xF).astype(jnp.int8)
+    hi = (packed >> 4).astype(jnp.int8)
+    lo = jnp.where(lo >= 8, lo - 16, lo)
+    hi = jnp.where(hi >= 8, hi - 16, hi)
+    k = packed.shape[0]
+    out = jnp.stack([lo, hi], axis=-1).reshape(k, -1)
+    return out
+
+
+def quantize_a8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Per-token (last-axis) symmetric int8. x: [..., K] -> (q, scale[..., 1])."""
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0).astype(jnp.float32)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def w4a8_matmul_ref(x: jax.Array, qw: QuantizedLinear,
+                    group: int = GROUP) -> jax.Array:
+    """Reference W4A8 linear: quantize activations, int32 accumulate per
+    group, group-rescale, sum. x: [..., K] float -> [..., N] float32."""
+    xq, xs = quantize_a8(x)
+    k = xq.shape[-1]
+    n = qw.packed.shape[1] * 2
+    pad_k = (-k) % group
+    if pad_k:
+        xq = jnp.pad(xq, (*[(0, 0)] * (xq.ndim - 1), (0, pad_k)))
+    w = unpack_w4(qw.packed)                              # [K, N] int8
+    if pad_k:
+        w = jnp.pad(w, ((0, pad_k), (0, 0)))
+    kp = w.shape[0]
+    g = kp // group
+    xg = xq.reshape(*xq.shape[:-1], g, group)
+    wg = w.reshape(g, group, n)
+    acc = jnp.einsum("...gk,gkn->...gn", xg.astype(jnp.int32),
+                     wg.astype(jnp.int32))                # [..., G, N] int32
+    out = jnp.sum(acc.astype(jnp.float32) * qw.scale, axis=-2) * xs
+    if qw.bias is not None:
+        out = out + qw.bias
+    return out
+
+
+def dequantize_w4(qw: QuantizedLinear, group: int = GROUP) -> jax.Array:
+    w = unpack_w4(qw.packed).astype(jnp.float32)
+    k, n = w.shape
+    pad_k = (-k) % group
+    if pad_k:
+        w = jnp.pad(w, ((0, pad_k), (0, 0)))
+    wg = w.reshape(-1, group, n) * qw.scale[:, None, :]
+    return wg.reshape(-1, n)[:k]

@@ -1,0 +1,85 @@
+"""Rotary positional embedding: direct form + the paper's decoder-specialized
+incremental recurrence (Eq. 11).
+
+The FPGA cannot afford cos/sin of large angles (CORDIC range limits), so the
+paper caches ``(cos m*theta_i, sin m*theta_i)`` and advances one position with
+the angle-addition constants ``(a_i, b_i) = (cos theta_i, sin theta_i)`` — four
+multiplies per channel pair. We carry exactly that state in the serving loop
+(``RopeState``), and since cached keys are stored *post-RoPE* (as in the paper)
+only the new token's q/k are ever rotated.
+
+Pairing convention: half-split ("NeoX"/llama style) — channel i pairs with
+channel i + d/2. The paper's Eq. 3 uses consecutive pairs; the two are
+permutations of each other and produce identical attention as long as q and k
+use the same convention (noted in DESIGN.md §6).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim: int, base: float = 10000.0,
+               rotary_dim: int | None = None) -> jax.Array:
+    """Angular frequencies omega_i (Eq. 1). ``rotary_dim`` < head_dim applies
+    RoPE to a prefix of channels only (partial rotary, e.g. ChatGLM)."""
+    rd = head_dim if rotary_dim is None else rotary_dim
+    i = jnp.arange(rd // 2, dtype=jnp.float32)
+    return base ** (-2.0 * i / rd)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, base: float = 10000.0,
+               rotary_dim: int | None = None) -> jax.Array:
+    """Direct RoPE. x: [..., S, D]; positions: [S] or broadcastable [..., S]."""
+    d = x.shape[-1]
+    rd = d if rotary_dim is None else rotary_dim
+    freqs = rope_freqs(d, base, rotary_dim)                      # [rd/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs       # [..., S, rd/2]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x_rot, x_pass = x[..., :rd], x[..., rd:]
+    x1, x2 = x_rot[..., : rd // 2], x_rot[..., rd // 2:]
+    r1 = x1 * cos - x2 * sin
+    r2 = x1 * sin + x2 * cos
+    return jnp.concatenate([r1, r2, x_pass], axis=-1).astype(x.dtype)
+
+
+class RopeState(NamedTuple):
+    """Cached (cos m*theta, sin m*theta) for the *current* position m, plus the
+    per-step rotation constants (a, b) = (cos theta, sin theta)."""
+    cos_m: jax.Array  # [rd/2] f32
+    sin_m: jax.Array  # [rd/2] f32
+    a: jax.Array      # [rd/2] f32, cos(theta_i)
+    b: jax.Array      # [rd/2] f32, sin(theta_i)
+
+
+def rope_state_init(head_dim: int, base: float = 10000.0,
+                    position: int | jax.Array = 0,
+                    rotary_dim: int | None = None) -> RopeState:
+    freqs = rope_freqs(head_dim, base, rotary_dim)
+    m = jnp.asarray(position, jnp.float32)
+    return RopeState(
+        cos_m=jnp.cos(m * freqs), sin_m=jnp.sin(m * freqs),
+        a=jnp.cos(freqs), b=jnp.sin(freqs),
+    )
+
+
+def rope_state_advance(state: RopeState) -> RopeState:
+    """Angle addition: cos((m+1)t) = cos(mt)cos(t) - sin(mt)sin(t), etc.
+    Four multiplies per channel pair — Eq. 11's datapath."""
+    cos_next = state.cos_m * state.a - state.sin_m * state.b
+    sin_next = state.sin_m * state.a + state.cos_m * state.b
+    return RopeState(cos_m=cos_next, sin_m=sin_next, a=state.a, b=state.b)
+
+
+def apply_rope_from_state(x: jax.Array, state: RopeState) -> jax.Array:
+    """Rotate a single-position vector using the cached angle state.
+    x: [..., D] (one token)."""
+    d = x.shape[-1]
+    rd = 2 * state.cos_m.shape[-1]
+    x_rot, x_pass = x[..., :rd], x[..., rd:]
+    x1, x2 = x_rot[..., : rd // 2], x_rot[..., rd // 2:]
+    r1 = x1 * state.cos_m - x2 * state.sin_m
+    r2 = x1 * state.sin_m + x2 * state.cos_m
+    return jnp.concatenate([r1, r2, x_pass], axis=-1).astype(x.dtype)

@@ -1,0 +1,3 @@
+from .pipeline import SyntheticTokenStream, batch_for_step
+
+__all__ = ["SyntheticTokenStream", "batch_for_step"]

@@ -1,0 +1,6 @@
+from .sharding import (batch_specs, cache_specs, param_specs, mesh_axis_names,
+                       MeshRules)
+from . import roofline
+
+__all__ = ["batch_specs", "cache_specs", "param_specs", "mesh_axis_names",
+           "MeshRules", "roofline"]

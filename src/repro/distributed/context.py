@@ -1,0 +1,53 @@
+"""Process-wide distribution context.
+
+Model code (MoE EP dispatch, sequence-parallel decode attention) needs the
+concrete mesh to build ``shard_map`` regions, but models are mesh-agnostic by
+design. Launchers (dryrun / train / serve) install the mesh + axis roles
+here; model modules consult it and fall back to single-device math when it's
+unset (tests, examples on one CPU).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+
+
+@dataclass
+class DistContext:
+    mesh: jax.sharding.Mesh | None = None
+    batch_axes: tuple[str, ...] = ()     # token/batch sharding axes (DP/FSDP)
+    model_axis: str | None = None        # TP/EP axis
+
+    @property
+    def active(self) -> bool:
+        return self.mesh is not None
+
+    def axis_size(self, names) -> int:
+        if self.mesh is None:
+            return 1
+        if isinstance(names, str):
+            names = (names,)
+        n = 1
+        for a in names:
+            n *= self.mesh.shape[a]
+        return n
+
+
+_CTX = DistContext()
+
+
+def set_context(mesh, batch_axes=("data",), model_axis="model") -> DistContext:
+    global _CTX
+    _CTX = DistContext(mesh=mesh, batch_axes=tuple(batch_axes),
+                       model_axis=model_axis)
+    return _CTX
+
+
+def clear_context():
+    global _CTX
+    _CTX = DistContext()
+
+
+def get_context() -> DistContext:
+    return _CTX

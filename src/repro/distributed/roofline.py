@@ -1,0 +1,313 @@
+"""Roofline analysis from compiled dry-run artifacts (deliverable g).
+
+This container is CPU-only; TPU v5e is the *target*. We therefore derive the
+three roofline terms per (arch, shape, mesh) cell from the compiled HLO rather
+than wall-clock:
+
+    compute term    = HLO_FLOPs        / (chips x PEAK_FLOPS)
+    memory term     = HLO_bytes        / (chips x HBM_BW)
+    collective term = collective_bytes / (chips x ICI_BW)
+
+``compiled.cost_analysis()`` supplies HLO_FLOPs / HLO_bytes (whole-program,
+all chips). Collective bytes are NOT in cost_analysis: we parse the optimized
+HLO module text and sum operand sizes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute, weighting each kind by the
+per-chip traffic its ring implementation moves over ICI links.
+
+Hardware constants (TPU v5e, per chip):
+    197 TFLOP/s bf16 peak, 819 GB/s HBM, ~50 GB/s/link ICI (prompt-specified).
+"""
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+
+# ---------------------------------------------------------------------------
+# TPU v5e hardware constants
+# ---------------------------------------------------------------------------
+PEAK_FLOPS = 197e12     # bf16 FLOP/s per chip
+HBM_BW = 819e9          # bytes/s per chip
+ICI_BW = 50e9           # bytes/s per ICI link (prompt-specified)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 1, "s4": 1, "s8": 1, "u2": 1, "u4": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+}
+
+_COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                     "all-to-all", "collective-permute")
+
+# one HLO shape token, e.g. ``bf16[8,128,4096]{2,1,0}`` or ``f32[]``
+_SHAPE_RE = re.compile(r"\b([a-z]+[0-9]+(?:e[0-9]+m[0-9]+(?:fn)?)?|pred|token)"
+                       r"\[([0-9,]*)\]")
+
+
+def shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+_OPND_RE = re.compile(r"%([\w.\-]+)")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+
+
+def _build_symbol_table(hlo_text: str) -> dict[str, int]:
+    """Map instruction name -> result bytes, for operand-size lookups.
+    (This XLA version prints operands as bare %names, not typed.)"""
+    table: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.groups()
+        paren = rhs.find("(")
+        head = rhs[:paren] if paren > 0 else rhs
+        table[name] = sum(shape_bytes(dt, dims)
+                          for dt, dims in _SHAPE_RE.findall(head))
+    return table
+
+
+def _group_size(line: str) -> int | None:
+    """Collective group size from replica_groups (iota or explicit list)."""
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))          # [n_groups, group_size]<=[...]
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return None
+
+
+def _operand_names(line: str) -> list[str]:
+    """Operand %names inside the op-call parens (attributes excluded)."""
+    paren = line.find("(")
+    if paren < 0:
+        return []
+    args = line[paren + 1:]
+    depth = 1
+    for i, ch in enumerate(args):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                args = args[:i]
+                break
+    return _OPND_RE.findall(args)
+
+
+@dataclass
+class CollectiveStats:
+    """Per-kind operand bytes + per-chip ICI traffic (ring model).
+
+    Post-GSPMD HLO is the *per-device* program, so every parsed shape is a
+    per-chip size already. Ring-algorithm traffic per chip:
+
+        all-reduce    : 2 x (n-1)/n x operand bytes (RS + AG phases)
+        all-gather    : (n-1)/n x output bytes
+        reduce-scatter: (n-1)/n x operand bytes
+        all-to-all    : (n-1)/n x operand bytes
+        collective-permute : operand bytes (single hop)
+    """
+    op_bytes: dict[str, int] = field(default_factory=dict)
+    op_counts: dict[str, int] = field(default_factory=dict)
+    ici_bytes: float = 0.0
+
+    @property
+    def total_operand_bytes(self) -> int:
+        return sum(self.op_bytes.values())
+
+
+def parse_collectives(hlo_text: str, default_group: int = 2) -> CollectiveStats:
+    """Scan optimized per-device HLO; accumulate collective operand sizes and
+    ring-model ICI traffic. ``-start`` variants count once (their ``-done``
+    twin carries no new traffic)."""
+    table = _build_symbol_table(hlo_text)
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if "-done(" in stripped or "-done.." in stripped:
+            continue
+        for kind in _COLLECTIVE_KINDS:
+            if f" {kind}(" in stripped or f" {kind}-start(" in stripped:
+                opnds = _operand_names(stripped)
+                ob = sum(table.get(o, 0) for o in opnds)
+                m = _DEF_RE.match(stripped)
+                rb = table.get(m.group(1), 0) if m else 0
+                n = _group_size(stripped) or default_group
+                f = (n - 1) / max(n, 1)
+                if kind == "all-reduce":
+                    stats.ici_bytes += 2 * f * ob
+                elif kind == "all-gather":
+                    stats.ici_bytes += f * rb
+                elif kind == "collective-permute":
+                    stats.ici_bytes += ob
+                else:  # reduce-scatter, all-to-all
+                    stats.ici_bytes += f * ob
+                stats.op_bytes[kind] = stats.op_bytes.get(kind, 0) + ob
+                stats.op_counts[kind] = stats.op_counts.get(kind, 0) + 1
+                break
+    return stats
+
+
+# ---------------------------------------------------------------------------
+# Roofline terms
+# ---------------------------------------------------------------------------
+
+@dataclass
+class RooflineReport:
+    """Post-GSPMD ``cost_analysis()`` is *per-device*, so ``hlo_flops`` /
+    ``hlo_bytes`` here are per-chip; global figures are chips x per-chip.
+    The three terms are then exactly the prompt's formulas:
+    global_FLOPs / (chips x peak) == per-chip FLOPs / peak."""
+    arch: str
+    shape: str
+    mesh: str
+    n_chips: int
+    hlo_flops: float              # per-chip FLOPs
+    hlo_bytes: float              # per-chip bytes accessed
+    collective_op_bytes: int      # summed operand sizes (per-chip program)
+    collective_ici_bytes: float   # per-chip ICI traffic (ring model)
+    bytes_per_chip: float         # peak live memory per device
+    t_compute: float = 0.0
+    t_memory: float = 0.0
+    t_collective: float = 0.0
+    model_flops: float = 0.0      # 6·N·D useful flops (global)
+    op_counts: dict = field(default_factory=dict)
+
+    def finalize(self):
+        self.t_compute = self.hlo_flops / PEAK_FLOPS
+        self.t_memory = self.hlo_bytes / HBM_BW
+        # collective term: per-chip ICI traffic over per-chip link bandwidth
+        self.t_collective = self.collective_ici_bytes / ICI_BW
+        return self
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        global_flops = self.hlo_flops * self.n_chips
+        return self.model_flops / global_flops if global_flops else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the dominant-resource roofline the *useful* work
+        achieves: (model_flops-at-peak time) / (bound time). For memory- or
+        collective-bound cells this reads as how much of the step time is the
+        unavoidable compute."""
+        if self.t_bound <= 0:
+            return 0.0
+        t_useful = self.model_flops / (self.n_chips * PEAK_FLOPS)
+        return t_useful / self.t_bound
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.n_chips,
+            "chip_gflops": self.hlo_flops / 1e9,
+            "chip_gbytes": self.hlo_bytes / 1e9,
+            "coll_gbytes": self.collective_op_bytes / 1e9,
+            "ici_gbytes": self.collective_ici_bytes / 1e9,
+            "bytes_per_chip_gb": self.bytes_per_chip / 1e9,
+            "t_compute_ms": self.t_compute * 1e3,
+            "t_memory_ms": self.t_memory * 1e3,
+            "t_collective_ms": self.t_collective * 1e3,
+            "dominant": self.dominant,
+            "model_gflops": self.model_flops / 1e9,
+            "useful_frac": self.useful_flops_fraction,
+            "roofline_frac": self.roofline_fraction,
+            "op_counts": self.op_counts,
+        }
+
+
+def analyze(arch: str, shape: str, mesh_name: str, n_chips: int,
+            cost_analysis: dict, hlo_text: str,
+            bytes_per_chip: float, model_flops: float,
+            tp_size: int) -> RooflineReport:
+    stats = parse_collectives(hlo_text, default_group=tp_size)
+    rep = RooflineReport(
+        arch=arch, shape=shape, mesh=mesh_name, n_chips=n_chips,
+        hlo_flops=float(cost_analysis.get("flops", 0.0)),
+        hlo_bytes=float(cost_analysis.get("bytes accessed", 0.0)),
+        collective_op_bytes=stats.total_operand_bytes,
+        collective_ici_bytes=stats.ici_bytes,
+        bytes_per_chip=bytes_per_chip,
+        model_flops=model_flops,
+        op_counts=dict(stats.op_counts),
+    )
+    return rep.finalize()
+
+
+# ---------------------------------------------------------------------------
+# Model-FLOPs accounting (6·N·D rule, MoE-active-aware)
+# ---------------------------------------------------------------------------
+
+def count_params(cfg) -> tuple[int, int]:
+    """(total, active) parameter counts from a ModelConfig — analytic, no
+    instantiation. Active differs from total only for MoE (top_k experts)."""
+    d, dff, v = cfg.d_model, cfg.d_ff, cfg.vocab_size
+    dh = cfg.resolved_head_dim
+    attn = d * dh * (cfg.n_heads + 2 * cfg.n_kv_heads) + cfg.n_heads * dh * d
+
+    def ffn(n_used):
+        per = d * dff * (3 if cfg.gated_mlp else 2)
+        return per * max(n_used, 1) + (d * cfg.n_experts if cfg.n_experts else 0)
+
+    if cfg.family == "ssm":
+        d_att = 5 * d * d + d * max(32, d // 16) * 2     # rwkv time-mix
+        d_ffn = 2 * d * dff + d * d
+        layer_total = layer_active = d_att + d_ffn
+        attn = 0
+    else:
+        layer_total = attn + ffn(cfg.n_experts or 1)
+        layer_active = attn + ffn(cfg.top_k if cfg.n_experts else 1)
+        if cfg.family == "hybrid":
+            d_inner = cfg.ssm_expand * d
+            mamba = (d * 2 * d_inner + d_inner * (1 + 2 * cfg.ssm_state)
+                     + d_inner * d + cfg.ssm_conv * d_inner)
+            layer_total += mamba
+            layer_active += mamba
+
+    n_layers = cfg.n_layers + getattr(cfg, "encoder_layers", 0)
+    total = n_layers * layer_total + v * d * (1 if cfg.tie_embeddings else 2)
+    active = n_layers * layer_active + v * d * (1 if cfg.tie_embeddings else 2)
+    return int(total), int(active)
+
+
+def model_flops_for_cell(cfg, shape) -> float:
+    """MODEL_FLOPS = 6·N_active·D for training; 2·N_active·D for inference
+    (forward only). D = tokens processed by the step."""
+    _, active = count_params(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * active * tokens
+    # decode: one token per row; attention reads the KV cache (not in 2ND —
+    # add the 2·cache-dot FLOPs explicitly)
+    tokens = shape.global_batch
+    base = 2.0 * active * tokens
+    if cfg.family != "ssm":
+        dh = cfg.resolved_head_dim
+        kv_len = min(shape.seq_len, cfg.window) if cfg.window else shape.seq_len
+        attn_flops = (4.0 * cfg.n_heads * dh * kv_len) * cfg.n_layers * tokens
+        base += attn_flops
+    return base

@@ -1,0 +1,193 @@
+"""Sharding rules: parameter/batch/cache PartitionSpecs per (arch, shape).
+
+Scheme (DESIGN.md §3):
+  * ``pod``   — pure DP across pods (gradient all-reduce over DCI).
+  * ``data``  — batch DP + FSDP for training (params/optimizer sharded, gathered
+                at use); TP-only (no FSDP) for serving unless the model doesn't
+                fit, so decode steps don't pay per-layer param all-gathers.
+  * ``model`` — TP: d_ff & attention-projection output dims, vocab, MoE experts
+                (EP). Decode KV caches sequence-shard over ``model`` and batch-
+                shard over (pod, data); the SwiftKV monoid merge makes the
+                sequence split exact (sp_attention.py).
+
+GSPMD handles non-divisible dims by padding (e.g. 25 heads over 16), so rules
+only avoid *egregiously* uneven splits.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig, ShapeSpec
+
+
+@dataclass(frozen=True)
+class MeshRules:
+    mesh: Mesh
+
+    @property
+    def has_pod(self) -> bool:
+        return "pod" in self.mesh.axis_names
+
+    @property
+    def batch_axes(self):
+        return ("pod", "data") if self.has_pod else ("data",)
+
+    @property
+    def dp_size(self) -> int:
+        n = 1
+        for a in self.batch_axes:
+            n *= self.mesh.shape[a]
+        return n
+
+    @property
+    def tp_size(self) -> int:
+        return self.mesh.shape["model"]
+
+
+def mesh_axis_names(multi_pod: bool):
+    return ("pod", "data", "model") if multi_pod else ("data", "model")
+
+
+# (path regex, spec for trailing dims) — first match wins. ``F`` marks the
+# FSDP axis (data for train, None for serve); leading [L]/[G] scan axes are
+# auto-prepended as None.
+_RULES: list[tuple[str, tuple]] = [
+    (r"embed$",                    ("model", None)),
+    # unembed: model-parallel over vocab ONLY — FSDP-sharding its d dim makes
+    # the contraction partial over 'data' and GSPMD all-reduces full [B,S,V]
+    # f32 logits (33.6 GB/chip on the 90B vlm). 0.26 GB/chip replicated cost.
+    (r"unembed$",                  (None, "model")),
+    (r"router$",                   ("F", None)),
+    # column-parallel (output dim sharded); __qp/__qs are the W4A8
+    # packed-weight / group-scale twins (same layout, N-dim sharded)
+    (r"(wq|wk|wv|up|gate)(__q[ps])?$", ("F", "model")),
+    (r"(in_proj|x_proj)$",         ("F", "model")),
+    (r"(wr|wg|fk|fr|w_a)$",        ("F", "model")),
+    # row-parallel (input dim sharded); W4A8 packed/scale twins keep the
+    # K (reduction) dim on the model axis like their dense originals
+    (r"(wo|down)__q[ps]$",         ("model", None)),
+    (r"(wo|down|out_proj|fv|w_b)$", ("model", "F")),
+    (r"conv_w$",                   (None, "model")),
+    (r"a_log$",                    ("model", None)),
+]
+
+
+def _spec_for(path: str, ndim: int, fsdp) -> P:
+    if ndim <= 1:
+        return P()  # scalars / per-layer scalars & vectors: replicated
+    # MoE expert stacks [L, E, din, dout]: experts over model (EP), FSDP on din
+    if re.search(r"ffn/(up|gate|down)$", path) and ndim == 4:
+        return P(None, "model", fsdp, None)
+    for pat, trailing in _RULES:
+        if re.search(pat, path):
+            tr = tuple(fsdp if a == "F" else a for a in trailing)
+            if len(tr) > ndim:
+                tr = tr[-ndim:]
+            lead = (None,) * (ndim - len(tr))
+            return P(*lead, *tr)
+    return P()  # norms, scalars, small vectors: replicated
+
+
+def _tree_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    paths = ["/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+             for path, _ in flat]
+    return paths, [l for _, l in flat], treedef
+
+
+def _axis_size(mesh: Mesh, name) -> int:
+    if name is None:
+        return 1
+    if isinstance(name, (tuple, list)):
+        n = 1
+        for a in name:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[name]
+
+
+def fixup_divisibility(spec: P, shape, mesh: Mesh) -> P:
+    """Drop sharding on dims the mesh axes don't divide evenly (503-vocab
+    reduced configs, 25-head hymba, 51865-vocab whisper, batch=1 decode).
+    jit in_shardings require exact divisibility; GSPMD pads only internal
+    values, not arguments."""
+    dims = tuple(shape)
+    out = []
+    for i, name in enumerate(tuple(spec) + (None,) * (len(dims) - len(spec))):
+        if name is not None and dims[i] % _axis_size(mesh, name) != 0:
+            name = None
+        out.append(name)
+    return P(*out)
+
+
+def fixup_tree(specs_tree, shapes_tree, mesh: Mesh):
+    """Apply ``fixup_divisibility`` leaf-wise over matching pytrees."""
+    return jax.tree.map(
+        lambda s, l: fixup_divisibility(s, getattr(l, "shape", ()), mesh),
+        specs_tree, shapes_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def param_specs(params_shapes, rules: MeshRules, *, train: bool):
+    """Map a params shape-pytree to PartitionSpecs. ``train``: FSDP over data;
+    serve: TP-only (fsdp=None). Non-divisible dims fall back to replicated."""
+    fsdp = "data" if train else None
+    paths, leaves, treedef = _tree_with_paths(params_shapes)
+    specs = [fixup_divisibility(
+                 _spec_for(p, getattr(l, "ndim", 0), fsdp),
+                 getattr(l, "shape", ()), rules.mesh)
+             for p, l in zip(paths, leaves)]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec, rules: MeshRules):
+    """Specs for the input batch of one cell."""
+    bd = rules.batch_axes if shape.global_batch % rules.dp_size == 0 else None
+    if shape.kind in ("train", "prefill"):
+        specs = {"tokens": P(bd, None)}
+        if shape.kind == "train":
+            specs["labels"] = P(bd, None)
+        if cfg.family in ("vlm", "audio"):
+            specs["source"] = P(bd, None, None)
+        return specs
+    # decode: tokens [B] + cache pytree
+    return {"tokens": P(bd), "cache": cache_specs(cfg, shape, rules)}
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeSpec, rules: MeshRules):
+    """KV caches: batch over (pod,data) when divisible; *sequence* over the
+    model axis (SwiftKV sequence-parallel decode). Recurrent states: batch
+    over data axes, channels over model."""
+    bd = rules.batch_axes if shape.global_batch % rules.dp_size == 0 else None
+    # ring KV caches are ~window-sized: replicate the (tiny) seq dim instead
+    # of paying seq-shard collectives
+    seq_ax = None if cfg.kv_ring else "model"
+    specs = {"len": P(bd)}
+    if cfg.family == "ssm":
+        specs.update(rwkv_att=P(None, bd, "model"),
+                     rwkv_ffn=P(None, bd, "model"),
+                     rwkv_wkv=P(None, bd, "model", None, None))
+        return specs
+    specs["k"] = P(None, bd, seq_ax, None, None)
+    specs["v"] = specs["k"]
+    if cfg.rotary_dim:
+        specs["rope_cos"] = P(bd, None)
+        specs["rope_sin"] = P(bd, None)
+    if cfg.family == "hybrid":
+        specs["mamba_conv"] = P(None, bd, None, "model")
+        specs["mamba_ssm"] = P(None, bd, "model", None)
+    if cfg.cross_attn_every:
+        specs["cross_k"] = P(None, bd, None, None, None)
+        specs["cross_v"] = specs["cross_k"]
+        specs["source_len"] = P(bd)
+    return specs
+
+
+def named(tree_of_specs, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_of_specs,
+                        is_leaf=lambda x: isinstance(x, P))

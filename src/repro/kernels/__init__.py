@@ -1,0 +1,3 @@
+"""Pallas TPU kernels for the paper's two compute hot-spots: single-pass
+decode attention (FXP32 path on the FPGA -> f32 MXU here) and W4A8 GEMV
+(the dual-mode array's low-precision mode)."""

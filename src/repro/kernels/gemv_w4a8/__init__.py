@@ -1,0 +1,5 @@
+from . import ops, ref
+from .ops import gemv_w4a8, linear_w4a8
+from .ref import gemv_w4a8_ref
+
+__all__ = ["ops", "ref", "gemv_w4a8", "linear_w4a8", "gemv_w4a8_ref"]

@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the W4A8 kernel (dense unpack + int32 einsum)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.quantization import QuantizedLinear, w4a8_matmul_ref
+
+
+def gemv_w4a8_ref(x, packed, w_scale):
+    """Same contract as ops.gemv_w4a8 (float in / float out)."""
+    return w4a8_matmul_ref(x, QuantizedLinear(packed=packed, scale=w_scale,
+                                              bias=None))

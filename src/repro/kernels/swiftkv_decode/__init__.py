@@ -1,0 +1,5 @@
+from . import ops, ref
+from .ops import swiftkv_decode
+from .ref import swiftkv_decode_ref
+
+__all__ = ["ops", "ref", "swiftkv_decode", "swiftkv_decode_ref"]

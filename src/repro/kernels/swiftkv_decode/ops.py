@@ -1,0 +1,51 @@
+"""Public jit'd wrapper for the SwiftKV decode kernel.
+
+Handles GQA grouping, cache layout, sequence padding, and CPU fallback
+(interpret mode) so models can call one function everywhere.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import swiftkv_decode_pallas
+
+
+def _auto_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("window", "block_k", "scale",
+                                             "exp_mode", "interpret"))
+def swiftkv_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                   lengths: jax.Array, *, window: int | None = None,
+                   block_k: int = 512, scale: float | None = None,
+                   exp_mode: str = "native",
+                   interpret: bool | None = None) -> jax.Array:
+    """SwiftKV single-pass decode attention (Pallas).
+
+    q: [B, Hq, D]; k_cache/v_cache: [B, S, Hkv, D]; lengths: [B] int32.
+    Returns [B, Hq, D].
+    """
+    b, hq, d = q.shape
+    s_len, hkv = k_cache.shape[1], k_cache.shape[2]
+    assert hq % hkv == 0
+    g = hq // hkv
+    scale = float(1.0 / (d ** 0.5)) if scale is None else scale
+    interpret = _auto_interpret() if interpret is None else interpret
+
+    block_k = min(block_k, max(128, 1 << (s_len - 1).bit_length()))
+    pad = (-s_len) % block_k
+    if pad:
+        k_cache = jnp.pad(k_cache, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v_cache = jnp.pad(v_cache, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    qg = q.reshape(b, hkv, g, d)
+    kc = jnp.swapaxes(k_cache, 1, 2)   # [B, Hkv, S, D]
+    vc = jnp.swapaxes(v_cache, 1, 2)
+    out = swiftkv_decode_pallas(qg, kc, vc, lengths.astype(jnp.int32),
+                                block_k=block_k, window=window, scale=scale,
+                                exp_mode=exp_mode, interpret=interpret)
+    return out.reshape(b, hq, d)

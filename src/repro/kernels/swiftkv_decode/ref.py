@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the SwiftKV decode kernel: naive two-pass softmax
+attention (materializes scores — exactly what the kernel avoids)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.swiftkv import NEG_INF
+
+
+def swiftkv_decode_ref(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                       lengths: jax.Array, *, window: int | None = None,
+                       scale: float | None = None) -> jax.Array:
+    """q: [B, Hq, D]; caches: [B, S, Hkv, D]; lengths: [B] -> [B, Hq, D]."""
+    b, hq, d = q.shape
+    s_len, hkv = k_cache.shape[1], k_cache.shape[2]
+    g = hq // hkv
+    scale = 1.0 / (d ** 0.5) if scale is None else scale
+
+    qg = q.reshape(b, hkv, g, d).astype(jnp.float32)
+    kc = k_cache.astype(jnp.float32)
+    vc = v_cache.astype(jnp.float32)
+    s = jnp.einsum('bhgd,bshd->bhgs', qg, kc) * scale
+    t = jnp.arange(s_len)
+    valid = t[None, :] < lengths[:, None]                      # [B, S]
+    if window is not None:
+        valid &= t[None, :] >= lengths[:, None] - window
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(valid[:, None, None, :], p, 0.0)
+    out = jnp.einsum('bhgs,bshd->bhgd', p, vc)
+    return out.reshape(b, hq, d).astype(q.dtype)

@@ -1,0 +1,6 @@
+"""Launch layer: production mesh construction, multi-pod dry-run, and the
+train/serve drivers. ``dryrun.py`` must be the process entry point when used
+(it pins XLA_FLAGS before any jax import)."""
+from .mesh import make_production_mesh
+
+__all__ = ["make_production_mesh"]

@@ -1,0 +1,44 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant: importing this module never touches
+jax device state, so tests/benches keep their single-CPU world while the
+dry-run process (which sets ``xla_force_host_platform_device_count=512``
+before importing jax) builds the 256-chip single-pod and 512-chip multi-pod
+meshes from the same code path.
+
+Axes:
+  * ``pod``   — data-parallel across pods (gradient all-reduce over DCI).
+  * ``data``  — in-pod data parallel + FSDP axis.
+  * ``model`` — tensor/expert/sequence parallel axis (the TPU analogue of the
+                paper's 32-processor SKV array: heads and FFN columns spread
+                across it).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    """16x16 = 256 chips/pod; 2 pods = 512 chips when ``multi_pod``."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh_for(devices_per_pod: int, pods: int = 1,
+                  model_parallel: int = 16) -> jax.sharding.Mesh:
+    """Elastic variant: build a (pods, dp, tp) mesh from whatever device set
+    survives a failure — the launcher re-invokes this with the new counts
+    (dryrun proves lowering works for both 256- and 512-chip meshes)."""
+    dp = devices_per_pod // model_parallel
+    if pods > 1:
+        return jax.make_mesh((pods, dp, model_parallel),
+                             ("pod", "data", "model"))
+    return jax.make_mesh((dp, model_parallel), ("data", "model"))
+
+
+def make_host_mesh(model_parallel: int | None = None) -> jax.sharding.Mesh:
+    """Mesh over whatever devices exist in this process (tests, examples)."""
+    n = len(jax.devices())
+    tp = model_parallel or (2 if n % 2 == 0 and n > 1 else 1)
+    return jax.make_mesh((n // tp, tp), ("data", "model"))

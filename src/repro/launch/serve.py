@@ -1,0 +1,91 @@
+"""Serving driver: prefill + per-token decode (the paper's workload).
+
+Runs the ``ServingEngine`` over host devices (reduced configs) or a
+production mesh. The decode step is the unit the dry-run lowers for the
+``decode_*`` shape cells; here it actually executes and reports tokens/s.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --reduced \
+        --batch 4 --prompt-len 32 --gen 64
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import logging
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.models.api import build_model, needs_source
+from repro.serving import ServingEngine
+
+log = logging.getLogger("repro.launch.serve")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=64)
+    ap.add_argument("--max-len", type=int, default=0, help="default: pow2 fit")
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--decode-impl", default=None,
+                    choices=["blockwise", "tokenwise", "kernel", "naive"])
+    ap.add_argument("--production-mesh", action="store_true")
+    ap.add_argument("--metrics-out")
+    args = ap.parse_args(argv)
+
+    logging.basicConfig(level=logging.INFO)
+    cfg = get_config(args.arch, reduced=args.reduced)
+    if args.decode_impl:
+        cfg = cfg.replace(decode_impl=args.decode_impl)
+    model = build_model(cfg)
+    mesh = (make_production_mesh() if args.production_mesh
+            else make_host_mesh())
+
+    need = args.prompt_len + args.gen
+    max_len = args.max_len or (1 << (need - 1).bit_length())
+    rng = jax.random.PRNGKey(0)
+    params = model.init_params(rng)
+    src = None
+    if needs_source(cfg):
+        src = jax.random.normal(
+            jax.random.PRNGKey(1),
+            (args.batch, cfg.source_len, cfg.d_model),
+            jnp.dtype(cfg.compute_dtype)) * 0.02
+
+    with mesh:
+        eng = ServingEngine(model, params, max_len=max_len, batch=args.batch,
+                            source_len=cfg.source_len if src is not None
+                            else None)
+        prompts = jax.random.randint(
+            jax.random.PRNGKey(2), (args.batch, args.prompt_len), 0,
+            cfg.vocab_size, jnp.int32)
+        # warmup (compile)
+        _ = eng.generate(prompts, steps=2, temperature=args.temperature,
+                         source=src)
+        t0 = time.perf_counter()
+        out = eng.generate(prompts, steps=args.gen,
+                           temperature=args.temperature, source=src)
+        wall = time.perf_counter() - t0
+
+    toks = args.batch * args.gen
+    metrics = {"arch": args.arch, "batch": args.batch,
+               "prompt_len": args.prompt_len, "generated": args.gen,
+               "wall_s": round(wall, 3), "tokens_per_s": round(toks / wall, 1),
+               "ms_per_token_step": round(1e3 * wall / args.gen, 2)}
+    log.info("%s", metrics)
+    print(json.dumps(metrics))
+    if args.metrics_out:
+        Path(args.metrics_out).write_text(json.dumps(metrics, indent=1))
+    return out, metrics
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+from .api import build_model, input_specs, lm_loss, needs_source, source_spec
+from .config import SHAPES, ModelConfig, ShapeSpec, shape_applicable
+from .transformer import TransformerLM
+from .whisper import WhisperModel
+
+__all__ = ["build_model", "input_specs", "lm_loss", "needs_source",
+           "source_spec", "SHAPES", "ModelConfig", "ShapeSpec",
+           "shape_applicable", "TransformerLM", "WhisperModel"]

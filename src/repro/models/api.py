@@ -1,0 +1,73 @@
+"""Uniform model API: build_model / input_specs / lm_loss.
+
+``input_specs`` returns ShapeDtypeStruct stand-ins for every model input of an
+(arch x shape) cell — weak-type-correct, shardable, zero allocation — used by
+the multi-pod dry-run and the roofline harness.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig, ShapeSpec
+from .transformer import TransformerLM
+from .whisper import WhisperModel
+
+
+def build_model(cfg: ModelConfig):
+    if cfg.family == "audio":
+        return WhisperModel(cfg)
+    return TransformerLM(cfg)
+
+
+def needs_source(cfg: ModelConfig) -> bool:
+    return cfg.family in ("vlm", "audio")
+
+
+def source_spec(cfg: ModelConfig, batch: int) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct((batch, cfg.source_len, cfg.d_model),
+                                jnp.dtype(cfg.compute_dtype))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """ShapeDtypeStruct pytree for one (arch, shape) cell."""
+    b, s = shape.global_batch, shape.seq_len
+    model = build_model(cfg)
+    i32 = jnp.int32
+    if shape.kind == "train":
+        specs = {"tokens": jax.ShapeDtypeStruct((b, s), i32),
+                 "labels": jax.ShapeDtypeStruct((b, s), i32)}
+        if needs_source(cfg):
+            specs["source"] = source_spec(cfg, b)
+        return specs
+    if shape.kind == "prefill":
+        specs = {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+        if needs_source(cfg):
+            specs["source"] = source_spec(cfg, b)
+        return specs
+    # decode: one new token against a cache of length s
+    src_len = cfg.source_len if needs_source(cfg) else None
+    cache = jax.eval_shape(
+        functools.partial(model.init_cache, b, s, src_len))
+    return {"tokens": jax.ShapeDtypeStruct((b,), i32), "cache": cache}
+
+
+def lm_loss(model, params, tokens: jax.Array, labels: jax.Array,
+            source: jax.Array | None = None, *, aux_weight: float = 0.01,
+            remat: bool = True) -> jax.Array:
+    """Causal-LM cross entropy (+ MoE load-balance aux).
+
+    The label pick is a masked sum rather than ``take_along_axis`` so the
+    vocab axis can stay model-sharded end to end (a gather along a sharded
+    axis forces GSPMD into a full-vocab re-layout; the mask-sum lowers to a
+    partial sum + tiny all-reduce)."""
+    kw = {"source": source} if source is not None else {}
+    logits, aux = model.forward(params, tokens, remat=remat, **kw)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                          logits.ndim - 1)
+    picked = jnp.where(vocab_iota == labels[..., None], logits, 0.0)
+    ll = jnp.sum(picked, axis=-1)
+    return jnp.mean(logz - ll) + aux_weight * aux

@@ -1,0 +1,107 @@
+"""Model & shape configuration. One ``ModelConfig`` describes every assigned
+architecture family (dense / moe / ssm / hybrid / vlm / audio)."""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                       # dense | moe | ssm | hybrid | vlm | audio
+    vocab_size: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    head_dim: int | None = None       # default: d_model // n_heads
+    act: str = "silu"                 # silu | gelu
+    gated_mlp: bool = True            # SwiGLU / GeGLU vs plain MLP
+    qk_norm: bool = False             # qwen3-style per-head RMSNorm on q,k
+    rope_base: float = 10000.0
+    rotary_frac: float = 1.0          # fraction of head_dim rotated
+    window: int | None = None         # sliding-window attention
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    # --- MoE ---
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    # --- SSM (mamba branch of hybrid archs) ---
+    ssm_state: int = 0
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    # --- RWKV6 ---
+    rwkv_head_dim: int = 64
+    # --- cross-attention (vlm) / encoder-decoder (audio) ---
+    cross_attn_every: int = 0         # every Nth decoder layer cross-attends
+    encoder_layers: int = 0           # >0: encoder-decoder (whisper)
+    source_len: int = 1500            # stub frontend sequence length
+    # --- numerics / serving ---
+    compute_dtype: str = "bfloat16"
+    decode_impl: str = "blockwise"    # blockwise | tokenwise | kernel | naive
+                                      # | sp (sequence-parallel monoid merge)
+    rope_mode: str = "incremental"    # incremental (paper Eq.11) | direct
+    remat_policy: str = "full"        # full | dots — dots saves matmul
+                                      # outputs at layer boundaries (less
+                                      # recompute, more live memory)
+    w4a8_serve: bool = False          # serving: int4-packed projections +
+                                      # int8 activations (paper §IV-B) — 4x
+                                      # less weight traffic on decode
+    kv_ring: bool = False             # SWA archs: ring KV cache of size
+                                      # ~window instead of the full context
+                                      # (beyond-paper; long_500k hillclimb)
+    # --- lowering ---
+    unroll_layers: bool = False       # dry-run: python-loop the layer stack so
+                                      # cost_analysis counts every layer (scan
+                                      # bodies are costed once by XLA)
+    attn_block: int | None = None     # KV-block size for the single-pass
+                                      # attention scans (default 512). The
+                                      # dry-run cost pass sets it to seq_len
+                                      # so the block loop disappears and XLA
+                                      # costs the full attention work.
+    # --- capability flags ---
+    sub_quadratic: bool = False       # may run long_500k
+    notes: str = ""
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim if self.head_dim is not None else self.d_model // self.n_heads
+
+    @property
+    def rotary_dim(self) -> int:
+        rd = int(self.resolved_head_dim * self.rotary_frac)
+        return rd - (rd % 2)
+
+    @property
+    def is_encoder_decoder(self) -> bool:
+        return self.encoder_layers > 0
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str        # train | prefill | decode
+
+
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k":    ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k":  ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k":   ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeSpec) -> tuple[bool, str]:
+    """(runs?, reason-if-not). long_500k needs a sub-quadratic path
+    (SSM / SWA); pure full-attention archs skip it (DESIGN.md §4)."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, "full-attention arch: 500k decode needs a sub-quadratic path"
+    return True, ""

@@ -1,0 +1,90 @@
+"""Shared layer primitives: norms, embeddings, MLPs, parameter init.
+
+Pure-function style: params are nested dicts of arrays; scanned layer stacks
+hold arrays with a leading ``[L, ...]`` axis.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def maybe_constrain(x: jax.Array, *axes):
+    """Sharding constraint against the ambient mesh context; no-op outside
+    one (single-device tests). ``axes``: mesh-axis names / tuples / None,
+    one per dim. GSPMD pads non-divisible internal values itself."""
+    from jax.sharding import PartitionSpec as P
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*axes))
+    except Exception:
+        return x
+
+
+def batch_vocab_constrain(x: jax.Array):
+    """Pin a [..., V]-shaped activation to (batch over DP axes, vocab over
+    the model axis). The unembed matmul under FSDP leaves V unsharded (the
+    'data' axis is claimed by both the batch and the FSDP contraction), which
+    materializes a [B, S, V] f32 per chip — 40 GB at 151936-vocab. This one
+    constraint is the difference between fitting and not."""
+    from repro.distributed.context import get_context
+    ctx = get_context()
+    if not ctx.active:
+        return x
+    bd = ctx.batch_axes if x.shape[0] % ctx.axis_size(ctx.batch_axes) == 0 \
+        else None
+    v_ok = x.shape[-1] % ctx.axis_size(ctx.model_axis) == 0
+    axes = (bd, *([None] * (x.ndim - 2)),
+            ctx.model_axis if v_ok else None)
+    return maybe_constrain(x, *axes)
+
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * weight.astype(jnp.float32)).astype(dt)
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32) -> jax.Array:
+    scale = (1.0 / d_in) ** 0.5
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]
+
+
+def linear(p: dict, name: str, x: jax.Array) -> jax.Array:
+    """Projection through params dict ``p``: dense ``p[name]`` or the W4A8
+    quantized pair ``p[name+'__qp']`` (int4-packed) / ``p[name+'__qs']``
+    (group scales) produced by ``models.quantized.quantize_params`` — the
+    paper's dual-mode array (§IV-B): the same call site runs f32/bf16 dense
+    or INT4xINT8 GEMV."""
+    qp = p.get(name + "__qp")
+    if qp is None:
+        return x @ p[name].astype(x.dtype)
+    from repro.core.quantization import QuantizedLinear, w4a8_matmul_ref
+    qw = QuantizedLinear(packed=qp, scale=p[name + "__qs"], bias=None)
+    return w4a8_matmul_ref(x, qw).astype(x.dtype)
+
+
+def mlp_init(key, d_model: int, d_ff: int, gated: bool, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 3)
+    p = {"up": dense_init(ks[0], d_model, d_ff, dtype),
+         "down": dense_init(ks[1], d_ff, d_model, dtype)}
+    if gated:
+        p["gate"] = dense_init(ks[2], d_model, d_ff, dtype)
+    return p
+
+
+def mlp_apply(p: dict, x: jax.Array, act: str, gated: bool) -> jax.Array:
+    up = linear(p, "up", x)
+    if gated:
+        up = act_fn(act)(linear(p, "gate", x)) * up
+    else:
+        up = act_fn(act)(up)
+    return linear(p, "down", up)

@@ -1,0 +1,133 @@
+"""Selective SSM (Mamba-style) branch — used by the hymba hybrid arch.
+
+Structure per block: in-proj -> causal depthwise conv -> SiLU -> selective
+scan (data-dependent dt, B, C; diagonal A) -> gate -> out-proj. Decode carries
+an O(1) state: (conv tail, ssm state) — no KV cache, which is why the hybrid
+arch runs the 500k-context decode shape.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init
+
+
+class MambaState(NamedTuple):
+    conv: jax.Array  # [B, K-1, d_inner] trailing inputs for the causal conv
+    ssm: jax.Array   # [B, d_inner, N] hidden state
+
+
+def mamba_init(key, d_model: int, *, state: int = 16, conv: int = 4,
+               expand: int = 2, dtype=jnp.float32) -> dict:
+    d_inner = expand * d_model
+    ks = jax.random.split(key, 7)
+    return {
+        "in_proj": dense_init(ks[0], d_model, 2 * d_inner, dtype),
+        "conv_w": (jax.random.normal(ks[1], (conv, d_inner), jnp.float32)
+                   * (1.0 / conv) ** 0.5).astype(dtype),
+        "x_proj": dense_init(ks[2], d_inner, 1 + 2 * state, dtype),  # dt, B, C
+        "dt_bias": jnp.zeros((d_inner,), dtype),
+        "dt_w": dense_init(ks[3], 1, d_inner, dtype)[0],             # dt broadcast
+        "a_log": jnp.log(jnp.tile(jnp.arange(1, state + 1, dtype=jnp.float32),
+                                  (d_inner, 1))).astype(dtype),      # [d_inner, N]
+        "d_skip": jnp.ones((d_inner,), dtype),
+        "out_proj": dense_init(ks[4], d_inner, d_model, dtype),
+    }
+
+
+def _ssm_step(params, h, x_t, dt_t, b_t, c_t):
+    """One selective-scan step. h: [d_inner, N]; x_t: [d_inner];
+    dt_t: [d_inner]; b_t, c_t: [N]."""
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))        # [d_inner, N]
+    da = jnp.exp(dt_t[:, None] * a)                          # discretized decay
+    dbx = (dt_t * x_t)[:, None] * b_t[None, :]               # [d_inner, N]
+    h_new = da * h + dbx
+    y = jnp.einsum("dn,n->d", h_new, c_t)
+    return h_new, y
+
+
+def _conv_mix(conv_w, x_window):
+    """x_window: [K, d_inner] -> [d_inner] causal depthwise conv output."""
+    return jnp.sum(conv_w * x_window, axis=0)
+
+
+def mamba_forward(params: dict, x: jax.Array,
+                  return_state: bool = False):
+    """x: [B, S, d_model] -> [B, S, d_model] (training / prefill path).
+    ``return_state``: also return the MambaState after the last position."""
+    b, s, d = x.shape
+    dt_x = x.dtype
+    d_inner = params["out_proj"].shape[0]
+    k = params["conv_w"].shape[0]
+    xz = x @ params["in_proj"].astype(dt_x)
+    xi, z = jnp.split(xz, 2, axis=-1)                         # [B, S, d_inner]
+
+    # causal depthwise conv along S
+    xi_pad = jnp.pad(xi, ((0, 0), (k - 1, 0), (0, 0)))
+    conv = sum(xi_pad[:, i:i + s, :] * params["conv_w"][i].astype(dt_x)
+               for i in range(k))
+    u = jax.nn.silu(conv)
+
+    dbc = u @ params["x_proj"].astype(dt_x)                   # [B, S, 1+2N]
+    n = (dbc.shape[-1] - 1) // 2
+    dt = jax.nn.softplus(dbc[..., :1].astype(jnp.float32) * params["dt_w"]
+                         + params["dt_bias"])
+    bmat, cmat = dbc[..., 1:1 + n], dbc[..., 1 + n:]
+
+    def scan_one(carry, inp):
+        u_t, dt_t, b_t, c_t = inp
+        h, y = _ssm_step(params, carry, u_t.astype(jnp.float32),
+                         dt_t.astype(jnp.float32), b_t.astype(jnp.float32),
+                         c_t.astype(jnp.float32))
+        return h, y
+
+    def per_batch(u_b, dt_b, b_b, c_b):
+        h0 = jnp.zeros((d_inner, n), jnp.float32)
+        h_fin, ys = jax.lax.scan(scan_one, h0, (u_b, dt_b, b_b, c_b))
+        return h_fin, ys                                      # [S, d_inner]
+
+    h_fin, ys = jax.vmap(per_batch)(u, dt, bmat, cmat)
+    ys = ys.astype(dt_x)
+    y = ys + u * params["d_skip"].astype(dt_x)
+    y = y * jax.nn.silu(z)
+    out = y @ params["out_proj"].astype(dt_x)
+    if return_state:
+        # conv tail: last K-1 pre-conv inputs (from the padded stream)
+        tail = xi_pad[:, -(k - 1):, :] if k > 1 else xi[:, :0, :]
+        return out, MambaState(conv=tail.astype(jnp.float32), ssm=h_fin)
+    return out
+
+
+def mamba_init_state(params: dict, batch: int) -> MambaState:
+    d_inner = params["out_proj"].shape[0]
+    k = params["conv_w"].shape[0]
+    n = (params["x_proj"].shape[1] - 1) // 2
+    return MambaState(conv=jnp.zeros((batch, k - 1, d_inner), jnp.float32),
+                      ssm=jnp.zeros((batch, d_inner, n), jnp.float32))
+
+
+def mamba_decode_step(params: dict, x_t: jax.Array,
+                      state: MambaState) -> tuple[jax.Array, MambaState]:
+    """x_t: [B, d_model] one token -> ([B, d_model], new state)."""
+    dt_x = x_t.dtype
+    xz = x_t @ params["in_proj"].astype(dt_x)
+    xi, z = jnp.split(xz, 2, axis=-1)                         # [B, d_inner]
+    window = jnp.concatenate([state.conv, xi[:, None, :].astype(jnp.float32)], axis=1)
+    conv = jnp.einsum("bkd,kd->bd", window, params["conv_w"].astype(jnp.float32))
+    u = jax.nn.silu(conv).astype(dt_x)
+
+    dbc = u @ params["x_proj"].astype(dt_x)
+    n = (dbc.shape[-1] - 1) // 2
+    dt = jax.nn.softplus(dbc[..., :1].astype(jnp.float32) * params["dt_w"]
+                         + params["dt_bias"])
+    bvec, cvec = dbc[..., 1:1 + n], dbc[..., 1 + n:]
+
+    h, y = jax.vmap(lambda hh, uu, dd, bb, cc: _ssm_step(params, hh, uu, dd, bb, cc))(
+        state.ssm, u.astype(jnp.float32), dt.astype(jnp.float32),
+        bvec.astype(jnp.float32), cvec.astype(jnp.float32))
+    y = y.astype(dt_x) + u * params["d_skip"].astype(dt_x)
+    y = y * jax.nn.silu(z)
+    return y @ params["out_proj"].astype(dt_x), MambaState(conv=window[:, 1:], ssm=h)

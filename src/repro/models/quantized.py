@@ -1,0 +1,68 @@
+"""W4A8 serving-path quantization (paper §IV-B, end to end).
+
+``quantize_params(params)`` walks a params pytree and replaces every
+eligible projection weight ``name`` (the wq/wk/wv/wo attention projections
+and up/gate/down MLP matrices — the decode step's weight traffic) with the
+int4-packed ``name__qp`` + group-scale ``name__qs`` pair that
+``layers.linear`` consumes. Stacked layer weights ``[L, K, N]`` quantize per
+layer via vmap, so scanned stacks keep their leading axis.
+
+Weight bytes drop 4x vs bf16 (uint8 nibbles + f32 scales at K/128
+granularity) — the decode step is weight-read-bound, so this is the
+dual-mode-array lever measured in EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantization import GROUP, quantize_w4
+
+QUANT_KEYS = ("wq", "wk", "wv", "wo", "up", "gate", "down")
+
+
+def _eligible(name: str, leaf) -> bool:
+    return (name in QUANT_KEYS
+            and hasattr(leaf, "ndim") and leaf.ndim in (2, 3)
+            and leaf.shape[-1] % 2 == 0
+            and str(leaf.dtype).startswith(("float", "bfloat")))
+
+
+def quantize_params(params):
+    """Returns a new pytree with eligible projections replaced by
+    (packed, scale) pairs. Dicts only (our param trees are nested dicts)."""
+    if not isinstance(params, dict):
+        return params
+    out = {}
+    for name, leaf in params.items():
+        if isinstance(leaf, dict):
+            out[name] = quantize_params(leaf)
+            continue
+        if _eligible(name, leaf):
+            if leaf.ndim == 2:
+                qw = quantize_w4(leaf)
+            else:  # [L, K, N] stacked layers
+                qw = jax.vmap(quantize_w4)(leaf)
+            out[name + "__qp"] = qw.packed
+            out[name + "__qs"] = qw.scale
+        else:
+            out[name] = leaf
+    return out
+
+
+def quantized_bytes(params) -> tuple[int, int]:
+    """(dense_bytes, quantized_bytes) for the eligible projections."""
+    dense = quant = 0
+    def walk(d):
+        nonlocal dense, quant
+        for name, leaf in d.items():
+            if isinstance(leaf, dict):
+                walk(leaf)
+            elif _eligible(name, leaf):
+                n = 1
+                for dim in leaf.shape:
+                    n *= dim
+                dense += n * 2                      # bf16
+                quant += n // 2 + (n // GROUP) * 4  # nibbles + f32 scales
+    walk(params)
+    return dense, quant

@@ -1,0 +1,171 @@
+"""RWKV6 ("Finch") — attention-free arch with data-dependent decay.
+
+The paper's SwiftKV attention is inapplicable here (no KV cache, no softmax —
+DESIGN.md §4); the WKV recurrence is itself a per-token single-pass state
+update, so decode is O(1) in context length and the 500k-decode shape runs.
+
+Simplifications vs the full release (documented): static token-shift mix
+coefficients (Finch's data-dependent lerp reduced to the RWKV5 form); the
+data-dependent decay ``w_t`` — the signature RWKV6 feature — is kept, via a
+low-rank projection. Head layout: [H, N] with N = rwkv_head_dim.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, rms_norm
+
+
+class RWKVLayerState(NamedTuple):
+    x_prev_att: jax.Array  # [B, d]
+    x_prev_ffn: jax.Array  # [B, d]
+    wkv: jax.Array         # [B, H, N, N] (key-dim x value-dim)
+
+
+def rwkv_layer_init(key, d_model: int, d_ff: int, head_dim: int,
+                    dtype=jnp.float32) -> dict:
+    h = d_model // head_dim
+    ks = jax.random.split(key, 12)
+    lr = max(32, d_model // 16)  # low-rank width for the decay projection
+    return {
+        # time mix
+        "mix_rkvwg": jnp.full((5, d_model), 0.5, dtype),
+        "wr": dense_init(ks[0], d_model, d_model, dtype),
+        "wk": dense_init(ks[1], d_model, d_model, dtype),
+        "wv": dense_init(ks[2], d_model, d_model, dtype),
+        "wg": dense_init(ks[3], d_model, d_model, dtype),
+        "wo": dense_init(ks[4], d_model, d_model, dtype),
+        "w0": jnp.full((d_model,), -6.0, dtype),              # base decay
+        "w_a": dense_init(ks[5], d_model, lr, dtype),          # low-rank dd-decay
+        "w_b": dense_init(ks[6], lr, d_model, dtype),
+        "u": jnp.zeros((h, head_dim), dtype),                  # current-token bonus
+        "ln_x": jnp.ones((d_model,), dtype),                   # per-head groupnorm
+        # channel mix
+        "mix_ffn": jnp.full((2, d_model), 0.5, dtype),
+        "fk": dense_init(ks[7], d_model, d_ff, dtype),
+        "fv": dense_init(ks[8], d_ff, d_model, dtype),
+        "fr": dense_init(ks[9], d_model, d_model, dtype),
+    }
+
+
+def _decay(p, xw):
+    lr = jnp.tanh(xw @ p["w_a"]) @ p["w_b"]
+    return jnp.exp(-jnp.exp((p["w0"] + lr).astype(jnp.float32)))  # (0,1) per chan
+
+
+def _wkv_step(s, r, k, v, w, u):
+    """One WKV step per head. s: [N, N]; r,k,w,u: [N]; v: [N]."""
+    kv = k[:, None] * v[None, :]                               # [N, N]
+    y = jnp.einsum("n,nm->m", r, s + u[:, None] * kv)
+    s_new = w[:, None] * s + kv
+    return s_new, y
+
+
+def rwkv_time_mix(p: dict, x: jax.Array, state: RWKVLayerState,
+                  head_dim: int) -> tuple[jax.Array, RWKVLayerState]:
+    """x: [B, S, d] -> (y, new state). Single pass over S via lax.scan."""
+    b, s, d = x.shape
+    dt = x.dtype
+    h = d // head_dim
+    x_prev = jnp.concatenate([state.x_prev_att[:, None, :], x[:, :-1, :]], axis=1)
+    mix = p["mix_rkvwg"].astype(dt)                           # [5, d]
+    def lerp(i):
+        return x * mix[i] + x_prev * (1 - mix[i])
+    xr, xk, xv, xw, xg = (lerp(i) for i in range(5))
+    r = (xr @ p["wr"].astype(dt)).reshape(b, s, h, head_dim)
+    k = (xk @ p["wk"].astype(dt)).reshape(b, s, h, head_dim)
+    v = (xv @ p["wv"].astype(dt)).reshape(b, s, h, head_dim)
+    g = jax.nn.silu(xg @ p["wg"].astype(dt))
+    w = _decay(p, xw).reshape(b, s, h, head_dim)              # f32
+
+    # chunked WKV scan: the inner per-token recurrence is rematted per chunk,
+    # so backward stores one wkv state per chunk boundary instead of one per
+    # token (4096-step scans otherwise save ~GBs of [B,H,N,N] carries/layer)
+    chunk = min(64, s)
+    pad = (-s) % chunk
+    n_chunks = (s + pad) // chunk
+
+    def pad_chunk(a, fill=0.0):
+        if pad:
+            a = jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                        constant_values=fill)
+        return a.reshape(b, n_chunks, chunk, h, head_dim)
+
+    rc = pad_chunk(r.astype(jnp.float32))
+    kc = pad_chunk(k.astype(jnp.float32))   # k=0 on pads: kv update is 0
+    vc = pad_chunk(v.astype(jnp.float32))
+    wc = pad_chunk(w, fill=1.0)             # w=1 on pads: state unchanged
+
+    def scan_batch(rb, kb, vb, wb):
+        def step(sh, inp):
+            r_t, k_t, v_t, w_t = inp                           # [h, N] each
+            s_new, y = jax.vmap(_wkv_step)(sh, r_t, k_t, v_t, w_t,
+                                           p["u"].astype(jnp.float32))
+            return s_new, y
+
+        def chunk_step(sh, inp):
+            return jax.lax.scan(step, sh, inp)
+
+        s0 = jnp.zeros((h, head_dim, head_dim), jnp.float32)
+        s_fin, ys = jax.lax.scan(jax.checkpoint(chunk_step), s0,
+                                 (rb, kb, vb, wb))
+        return s_fin, ys.reshape(n_chunks * chunk, h, head_dim)[:s]
+
+    s_fin, ys = jax.vmap(scan_batch)(rc, kc, vc, wc)
+    y = ys.reshape(b, s, d).astype(dt)
+    y = rms_norm(y, p["ln_x"]) * g
+    y = y @ p["wo"].astype(dt)
+    new_state = RWKVLayerState(x_prev_att=x[:, -1, :], x_prev_ffn=state.x_prev_ffn,
+                               wkv=s_fin)
+    return y, new_state
+
+
+def rwkv_channel_mix(p: dict, x: jax.Array,
+                     state: RWKVLayerState) -> tuple[jax.Array, RWKVLayerState]:
+    dt = x.dtype
+    x_prev = jnp.concatenate([state.x_prev_ffn[:, None, :], x[:, :-1, :]], axis=1)
+    mix = p["mix_ffn"].astype(dt)
+    xk = x * mix[0] + x_prev * (1 - mix[0])
+    xr = x * mix[1] + x_prev * (1 - mix[1])
+    k = jnp.square(jax.nn.relu(xk @ p["fk"].astype(dt)))
+    out = jax.nn.sigmoid(xr @ p["fr"].astype(dt)) * (k @ p["fv"].astype(dt))
+    return out, state._replace(x_prev_ffn=x[:, -1, :])
+
+
+def rwkv_time_mix_step(p: dict, x_t: jax.Array, state: RWKVLayerState,
+                       head_dim: int) -> tuple[jax.Array, RWKVLayerState]:
+    """Decode: x_t [B, d] one token, O(1) state update."""
+    b, d = x_t.shape
+    dt = x_t.dtype
+    h = d // head_dim
+    mix = p["mix_rkvwg"].astype(dt)
+    xp = state.x_prev_att
+    def lerp(i):
+        return x_t * mix[i] + xp * (1 - mix[i])
+    xr, xk, xv, xw, xg = (lerp(i) for i in range(5))
+    r = (xr @ p["wr"].astype(dt)).reshape(b, h, head_dim).astype(jnp.float32)
+    k = (xk @ p["wk"].astype(dt)).reshape(b, h, head_dim).astype(jnp.float32)
+    v = (xv @ p["wv"].astype(dt)).reshape(b, h, head_dim).astype(jnp.float32)
+    g = jax.nn.silu(xg @ p["wg"].astype(dt))
+    w = _decay(p, xw).reshape(b, h, head_dim)
+    s_new, y = jax.vmap(jax.vmap(_wkv_step))(
+        state.wkv, r, k, v, w, jnp.broadcast_to(p["u"].astype(jnp.float32),
+                                                (b, h, head_dim)))
+    y = y.reshape(b, d).astype(dt)
+    y = rms_norm(y, p["ln_x"]) * g
+    return y @ p["wo"].astype(dt), state._replace(x_prev_att=x_t, wkv=s_new)
+
+
+def rwkv_channel_mix_step(p: dict, x_t: jax.Array,
+                          state: RWKVLayerState) -> tuple[jax.Array, RWKVLayerState]:
+    dt = x_t.dtype
+    mix = p["mix_ffn"].astype(dt)
+    xp = state.x_prev_ffn
+    xk = x_t * mix[0] + xp * (1 - mix[0])
+    xr = x_t * mix[1] + xp * (1 - mix[1])
+    k = jnp.square(jax.nn.relu(xk @ p["fk"].astype(dt)))
+    out = jax.nn.sigmoid(xr @ p["fr"].astype(dt)) * (k @ p["fv"].astype(dt))
+    return out, state._replace(x_prev_ffn=x_t)

@@ -1,0 +1,789 @@
+"""Generic decoder-only transformer covering the dense / moe / vlm / hybrid
+families (whisper composes two of these stacks — see whisper.py).
+
+Layer stacks are ``lax.scan``s over parameter pytrees with a leading ``[L]``
+axis, so 100-layer configs lower to compact HLO. VLM-style dedicated
+cross-attention layers (every Nth layer) scan over *groups* of
+``(cross_attn_every - 1) self + 1 cross`` layers.
+
+Decode (the paper's workload) maintains a KV cache ``[L, B, Smax, Hkv, Dh]``;
+keys are cached *post-RoPE* (paper §IV-C) and the query/key rotation for the
+new token uses the incremental Eq. 11 recurrence carried in the cache
+(``rope_mode="incremental"``) or direct cos/sin (``"direct"``).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import attention as attn_lib
+from repro.core import rope as rope_lib
+from .config import ModelConfig
+from .layers import (batch_vocab_constrain, dense_init, embed_init, linear,
+                     mlp_apply, mlp_init, rms_norm)
+from . import mamba as mamba_lib
+from . import moe as moe_lib
+from . import rwkv6 as rwkv_lib
+
+Params = dict[str, Any]
+Cache = dict[str, Any]
+
+
+def make_remat(cfg: ModelConfig):
+    """Layer-boundary rematerialization with a configurable policy:
+    'full' recomputes everything (min memory), 'dots' saves matmul outputs
+    (halves the recompute FLOPs/bytes at higher live memory)."""
+    if cfg.remat_policy == "dots":
+        pol = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        return lambda f: jax.checkpoint(f, policy=pol)
+    return jax.checkpoint
+
+
+def layer_scan(step, carry, xs, *, unroll: bool):
+    """``lax.scan`` over a stacked-layer pytree, or a Python unroll.
+
+    Unrolling exists for the dry-run cost model: XLA's ``cost_analysis``
+    counts a while-loop body once, so scanned stacks under-report FLOPs /
+    bytes / collective traffic by a factor of L. Runtime paths keep the scan
+    (compact HLO); the dry-run lowers with ``cfg.unroll_layers=True``.
+    """
+    if not unroll:
+        return jax.lax.scan(step, carry, xs)
+    n = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        x_i = jax.tree.map(lambda a: a[i], xs)
+        carry, y = step(carry, x_i)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        stacked = jax.tree.map(lambda *zs: jnp.stack(zs), *ys)
+    else:
+        stacked = None
+    return carry, stacked
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _attn_init(key, cfg: ModelConfig, cross: bool = False) -> Params:
+    d, dh = cfg.d_model, cfg.resolved_head_dim
+    hq, hkv = cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, hq * dh),
+        "wk": dense_init(ks[1], d, hkv * dh),
+        "wv": dense_init(ks[2], d, hkv * dh),
+        "wo": dense_init(ks[3], hq * dh, d),
+    }
+    if cfg.qk_norm:
+        p["qn"] = jnp.ones((dh,), jnp.float32)
+        p["kn"] = jnp.ones((dh,), jnp.float32)
+    if cross:
+        p["gate"] = jnp.zeros((), jnp.float32)  # gated cross-attn (llama-vision)
+    return p
+
+
+def _ffn_init(key, cfg: ModelConfig) -> Params:
+    if cfg.n_experts:
+        return moe_lib.moe_init(key, cfg.d_model, cfg.d_ff, cfg.n_experts,
+                                gated=cfg.gated_mlp)
+    return mlp_init(key, cfg.d_model, cfg.d_ff, cfg.gated_mlp)
+
+
+def _self_block_init(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 4)
+    p = {
+        "ln1": jnp.ones((cfg.d_model,), jnp.float32),
+        "attn": _attn_init(ks[0], cfg),
+        "ln2": jnp.ones((cfg.d_model,), jnp.float32),
+        "ffn": _ffn_init(ks[1], cfg),
+    }
+    if cfg.family == "hybrid":
+        p["mamba"] = mamba_lib.mamba_init(ks[2], cfg.d_model, state=cfg.ssm_state,
+                                          conv=cfg.ssm_conv, expand=cfg.ssm_expand)
+        p["ln_attn_out"] = jnp.ones((cfg.d_model,), jnp.float32)
+        p["ln_mamba_out"] = jnp.ones((cfg.d_model,), jnp.float32)
+    if cfg.cross_attn_every == 1:   # whisper-style: cross-attn inside the layer
+        p["ln_cross"] = jnp.ones((cfg.d_model,), jnp.float32)
+        p["cross"] = _attn_init(ks[3], cfg, cross=True)
+    return p
+
+
+def _cross_block_init(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": jnp.ones((cfg.d_model,), jnp.float32),
+        "cross": _attn_init(ks[0], cfg, cross=True),
+        "ln2": jnp.ones((cfg.d_model,), jnp.float32),
+        "ffn": mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.gated_mlp),
+    }
+
+
+class TransformerLM:
+    """cfg.family in {dense, moe, hybrid, vlm, ssm}. ``ssm`` -> RWKV6 stack."""
+
+    def __init__(self, cfg: ModelConfig, *, causal: bool = True,
+                 with_embedding: bool = True):
+        self.cfg = cfg
+        self.causal = causal
+        self.with_embedding = with_embedding
+
+    # ---- init ------------------------------------------------------------
+    def init_params(self, rng) -> Params:
+        cfg = self.cfg
+        k_embed, k_blocks, k_cross, k_out = jax.random.split(rng, 4)
+        params: Params = {"ln_f": jnp.ones((cfg.d_model,), jnp.float32)}
+        if self.with_embedding:
+            params["embed"] = embed_init(k_embed, cfg.vocab_size, cfg.d_model)
+            if not cfg.tie_embeddings:
+                params["unembed"] = dense_init(k_out, cfg.d_model, cfg.vocab_size)
+
+        if cfg.family == "ssm":
+            keys = jax.random.split(k_blocks, cfg.n_layers)
+            params["blocks"] = jax.vmap(
+                lambda k: {"ln1": jnp.ones((cfg.d_model,), jnp.float32),
+                           "ln2": jnp.ones((cfg.d_model,), jnp.float32),
+                           "mix": rwkv_lib.rwkv_layer_init(
+                               k, cfg.d_model, cfg.d_ff, cfg.rwkv_head_dim)})(keys)
+            return params
+
+        n_cross = self._n_cross_groups()
+        n_self = cfg.n_layers - n_cross
+        keys = jax.random.split(k_blocks, n_self)
+        params["blocks"] = jax.vmap(lambda k: _self_block_init(k, cfg))(keys)
+        if n_cross:
+            ckeys = jax.random.split(k_cross, n_cross)
+            params["cross_blocks"] = jax.vmap(
+                lambda k: _cross_block_init(k, cfg))(ckeys)
+        return params
+
+    def _n_cross_groups(self) -> int:
+        cfg = self.cfg
+        if cfg.cross_attn_every > 1:          # vlm: dedicated cross layers
+            return cfg.n_layers // cfg.cross_attn_every
+        return 0
+
+    # ---- shared attention math --------------------------------------------
+    def _qkv(self, p: Params, x: jax.Array):
+        cfg = self.cfg
+        dh = cfg.resolved_head_dim
+        b, s, _ = x.shape
+        q = linear(p, "wq", x).reshape(b, s, cfg.n_heads, dh)
+        k = linear(p, "wk", x).reshape(b, s, cfg.n_kv_heads, dh)
+        v = linear(p, "wv", x).reshape(b, s, cfg.n_kv_heads, dh)
+        if cfg.qk_norm:
+            q = rms_norm(q, p["qn"], cfg.norm_eps)
+            k = rms_norm(k, p["kn"], cfg.norm_eps)
+        return q, k, v
+
+    def _self_attn_full(self, p: Params, x: jax.Array,
+                        positions: jax.Array) -> jax.Array:
+        """Full-sequence self attention (training / encoder)."""
+        cfg = self.cfg
+        b, s, _ = x.shape
+        q, k, v = self._qkv(p, x)
+        if cfg.rotary_dim:
+            rot = functools.partial(rope_lib.apply_rope, base=cfg.rope_base,
+                                    rotary_dim=cfg.rotary_dim)
+            q = jnp.swapaxes(rot(jnp.swapaxes(q, 1, 2), positions), 1, 2)
+            k = jnp.swapaxes(rot(jnp.swapaxes(k, 1, 2), positions), 1, 2)
+        out = attn_lib.prefill_attention(q, k, v, causal=self.causal,
+                                         window=cfg.window,
+                                         kv_block=cfg.attn_block or 512)
+        return linear(p, "wo", out.reshape(b, s, -1))
+
+    def _cross_attn_full(self, p: Params, x: jax.Array,
+                         source: jax.Array) -> jax.Array:
+        """Cross attention to a stub-frontend source sequence (no RoPE)."""
+        b, s, _ = x.shape
+        cfg = self.cfg
+        dh = cfg.resolved_head_dim
+        q, _, _ = self._qkv(p, x)
+        k = linear(p, "wk", source).reshape(
+            b, source.shape[1], cfg.n_kv_heads, dh)
+        v = linear(p, "wv", source).reshape(
+            b, source.shape[1], cfg.n_kv_heads, dh)
+        if cfg.qk_norm:
+            k = rms_norm(k, p["kn"], cfg.norm_eps)
+        out = attn_lib.prefill_attention(q, k, v, causal=False,
+                                         kv_block=cfg.attn_block or 512)
+        out = linear(p, "wo", out.reshape(b, s, -1))
+        return jnp.tanh(p["gate"]).astype(x.dtype) * out
+
+    @staticmethod
+    def _seq_shard(x: jax.Array):
+        """Megatron-style sequence-sharded residual stream (train path):
+        constrain [B, S, d] activations to (batch over DP, S over model)
+        between blocks. GSPMD then reduce-scatters the row-parallel partial
+        sums in bf16 *before* the f32 norm region and all-gathers before the
+        next matmul — replacing f32 activation all-reduces with bf16 RS+AG
+        (half the ICI bytes) and sharding the norm compute (§Perf)."""
+        from repro.distributed.context import get_context
+        ctx = get_context()
+        if not ctx.active or x.ndim != 3 or x.shape[1] == 1:
+            return x
+        bd = ctx.batch_axes if x.shape[0] % ctx.axis_size(ctx.batch_axes) == 0 \
+            else None
+        s_ax = ctx.model_axis if x.shape[1] % ctx.axis_size(ctx.model_axis) == 0 \
+            else None
+        try:
+            from jax.sharding import PartitionSpec as P
+            return jax.lax.with_sharding_constraint(x, P(bd, s_ax, None))
+        except Exception:
+            return x
+
+    # ---- full-sequence blocks (training / prefill math) --------------------
+    def _self_block(self, p: Params, x: jax.Array, positions: jax.Array,
+                    source: jax.Array | None) -> tuple[jax.Array, jax.Array]:
+        cfg = self.cfg
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        attn_out = self._self_attn_full(p["attn"], h, positions)
+        if cfg.family == "hybrid":
+            mamba_out = mamba_lib.mamba_forward(p["mamba"], h)
+            mixed = 0.5 * (rms_norm(attn_out, p["ln_attn_out"], cfg.norm_eps)
+                           + rms_norm(mamba_out, p["ln_mamba_out"], cfg.norm_eps))
+            x = x + mixed
+        else:
+            x = x + attn_out
+        if "cross" in p and source is not None:   # whisper-style in-layer cross
+            x = x + self._cross_attn_full(
+                p["cross"], rms_norm(x, p["ln_cross"], cfg.norm_eps), source)
+        h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+        aux = jnp.zeros((), jnp.float32)
+        if cfg.n_experts:
+            y, aux = moe_lib.moe_apply(p["ffn"], h2, top_k=cfg.top_k,
+                                       act=cfg.act, gated=cfg.gated_mlp,
+                                       capacity_factor=cfg.capacity_factor)
+        else:
+            y = mlp_apply(p["ffn"], h2, cfg.act, cfg.gated_mlp)
+        return self._seq_shard(x + y), aux
+
+    def _cross_block(self, p: Params, x: jax.Array,
+                     source: jax.Array) -> jax.Array:
+        cfg = self.cfg
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        x = x + self._cross_attn_full(p["cross"], h, source)
+        h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+        return self._seq_shard(x + mlp_apply(p["ffn"], h2, cfg.act,
+                                             cfg.gated_mlp))
+
+    # ---- forward (training) -----------------------------------------------
+    def forward(self, params: Params, tokens: jax.Array | None = None, *,
+                embeds: jax.Array | None = None,
+                source: jax.Array | None = None,
+                remat: bool = True) -> tuple[jax.Array, jax.Array]:
+        """Returns (hidden-or-logits [B,S,*], moe aux loss). ``tokens`` XOR
+        ``embeds``; ``source``: [B, S_src, d] stub-frontend features."""
+        cfg = self.cfg
+        x = (params["embed"].astype(self._dt)[tokens] if embeds is None
+             else embeds.astype(self._dt))
+        b, s, _ = x.shape
+        positions = jnp.arange(s)
+
+        if cfg.family == "ssm":
+            x, aux = self._rwkv_forward(params, x, remat=remat)
+        else:
+            n_cross = self._n_cross_groups()
+            group = cfg.cross_attn_every if n_cross else 0
+
+            def self_step(carry, bp):
+                x, aux = carry
+                x, a = self._self_block(bp, x, positions, source)
+                return (x, aux + a), None
+
+            step = make_remat(cfg)(self_step) if remat else self_step
+
+            if not n_cross:
+                (x, aux), _ = layer_scan(step, (x, 0.0), params["blocks"], unroll=cfg.unroll_layers)
+            else:
+                n_self_per = group - 1
+
+                def group_step(carry, gp):
+                    sp, cp = gp
+                    (x, aux), _ = layer_scan(step, carry, sp, unroll=cfg.unroll_layers)
+                    x = self._cross_block(cp, x, source)
+                    return (x, aux), None
+
+                gstep = make_remat(cfg)(group_step) if remat else group_step
+                # reshape self blocks [n_self] -> [n_cross, n_self_per]
+                sp = jax.tree.map(
+                    lambda a: a.reshape(n_cross, n_self_per, *a.shape[1:]),
+                    params["blocks"])
+                (x, aux), _ = layer_scan(gstep, (x, 0.0),
+                                         (sp, params["cross_blocks"]),
+                                         unroll=cfg.unroll_layers)
+
+        x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+        return self._unembed(params, x), aux
+
+    def _rwkv_forward(self, params, x, remat: bool = True):
+        cfg = self.cfg
+        b = x.shape[0]
+
+        def step(carry, bp):
+            x = carry
+            st = rwkv_lib.RWKVLayerState(
+                x_prev_att=jnp.zeros((b, cfg.d_model), x.dtype),
+                x_prev_ffn=jnp.zeros((b, cfg.d_model), x.dtype),
+                wkv=jnp.zeros((b, cfg.d_model // cfg.rwkv_head_dim,
+                               cfg.rwkv_head_dim, cfg.rwkv_head_dim), jnp.float32))
+            h = rms_norm(x, bp["ln1"], cfg.norm_eps)
+            y, st = rwkv_lib.rwkv_time_mix(bp["mix"], h, st, cfg.rwkv_head_dim)
+            x = x + y
+            h2 = rms_norm(x, bp["ln2"], cfg.norm_eps)
+            y2, _ = rwkv_lib.rwkv_channel_mix(bp["mix"], h2, st)
+            return x + y2, None
+
+        step_fn = make_remat(cfg)(step) if remat else step
+        x, _ = layer_scan(step_fn, x, params["blocks"],
+                          unroll=cfg.unroll_layers)
+        return x, jnp.zeros((), jnp.float32)
+
+    @property
+    def _dt(self):
+        return jnp.dtype(self.cfg.compute_dtype)
+
+    def _unembed(self, params: Params, x: jax.Array) -> jax.Array:
+        if not self.with_embedding:
+            return x
+        w = (params["embed"].T if self.cfg.tie_embeddings
+             else params["unembed"])
+        logits = (x @ w.astype(x.dtype)).astype(jnp.float32)
+        # pin (batch over DP, vocab over model): see layers.batch_vocab_constrain
+        return batch_vocab_constrain(logits)
+
+    # =======================================================================
+    # Serving: KV cache init / prefill / decode_step
+    # =======================================================================
+    def init_cache(self, batch: int, max_len: int,
+                   source_len: int | None = None) -> Cache:
+        """Preallocated decode state. KV tensors [L, B, Smax, Hkv, Dh] in the
+        compute dtype; per-row lengths; incremental-RoPE angle state (Eq. 11);
+        family-specific recurrent states."""
+        cfg = self.cfg
+        dh = cfg.resolved_head_dim
+        dt = self._dt
+        cache: Cache = {"len": jnp.zeros((batch,), jnp.int32)}
+        if cfg.family == "ssm":
+            h = cfg.d_model // cfg.rwkv_head_dim
+            cache.update(
+                rwkv_att=jnp.zeros((cfg.n_layers, batch, cfg.d_model), dt),
+                rwkv_ffn=jnp.zeros((cfg.n_layers, batch, cfg.d_model), dt),
+                rwkv_wkv=jnp.zeros((cfg.n_layers, batch, h, cfg.rwkv_head_dim,
+                                    cfg.rwkv_head_dim), jnp.float32))
+            return cache
+        n_cross = self._n_cross_groups()
+        n_self = cfg.n_layers - n_cross
+        kv_len = max_len
+        if cfg.kv_ring and cfg.window:
+            # ring cache: ~window slots regardless of context (SWA archs);
+            # +128 rounding keeps the lane dimension aligned
+            kv_len = min(max_len, -(-(cfg.window + 1) // 128) * 128)
+        cache["k"] = jnp.zeros((n_self, batch, kv_len, cfg.n_kv_heads, dh), dt)
+        cache["v"] = jnp.zeros_like(cache["k"])
+        if cfg.rotary_dim:
+            rs = rope_lib.rope_state_init(dh, cfg.rope_base, 0, cfg.rotary_dim)
+            cache["rope_cos"] = jnp.broadcast_to(rs.cos_m, (batch, rs.cos_m.shape[0]))
+            cache["rope_sin"] = jnp.broadcast_to(rs.sin_m, (batch, rs.sin_m.shape[0]))
+        if cfg.family == "hybrid":
+            d_inner = cfg.ssm_expand * cfg.d_model
+            cache["mamba_conv"] = jnp.zeros(
+                (n_self, batch, cfg.ssm_conv - 1, d_inner), jnp.float32)
+            cache["mamba_ssm"] = jnp.zeros(
+                (n_self, batch, d_inner, cfg.ssm_state), jnp.float32)
+        n_cross_kv = (n_cross if cfg.cross_attn_every > 1
+                      else (cfg.n_layers if cfg.cross_attn_every == 1 else 0))
+        if n_cross_kv and source_len:
+            cache["cross_k"] = jnp.zeros(
+                (n_cross_kv, batch, source_len, cfg.n_kv_heads, dh), dt)
+            cache["cross_v"] = jnp.zeros_like(cache["cross_k"])
+            cache["source_len"] = jnp.full((batch,), source_len, jnp.int32)
+        return cache
+
+    def _rope_qk_decode(self, cache: Cache, q: jax.Array, k: jax.Array,
+                        lengths: jax.Array):
+        """Rotate the new token's q/k at its absolute position. ``incremental``
+        uses the cached Eq. 11 angle state; ``direct`` recomputes cos/sin."""
+        cfg = self.cfg
+        if not cfg.rotary_dim:
+            return q, k
+        if cfg.rope_mode == "incremental":
+            cos, sin = cache["rope_cos"], cache["rope_sin"]      # [B, rd/2]
+            rd = 2 * cos.shape[-1]
+            def rot(x):                                          # x: [B, H, Dh]
+                xr, xp = x[..., :rd], x[..., rd:]
+                x1, x2 = xr[..., : rd // 2], xr[..., rd // 2:]
+                c, s = cos[:, None, :].astype(x.dtype), sin[:, None, :].astype(x.dtype)
+                return jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c, xp], -1)
+            return rot(q), rot(k)
+        rot = lambda x: jax.vmap(
+            lambda xx, m: rope_lib.apply_rope(xx, m[None], cfg.rope_base,
+                                              cfg.rotary_dim))(
+            x[:, :, None, :], lengths)[:, :, 0, :]
+        return rot(q), rot(k)
+
+    def _advance_rope(self, cache: Cache) -> Cache:
+        cfg = self.cfg
+        if cfg.rotary_dim and cfg.rope_mode == "incremental":
+            rs = rope_lib.RopeState(
+                cos_m=cache["rope_cos"], sin_m=cache["rope_sin"],
+                a=jnp.cos(rope_lib.rope_freqs(self.cfg.resolved_head_dim,
+                                              cfg.rope_base, cfg.rotary_dim)),
+                b=jnp.sin(rope_lib.rope_freqs(self.cfg.resolved_head_dim,
+                                              cfg.rope_base, cfg.rotary_dim)))
+            rs = rope_lib.rope_state_advance(rs)
+            cache = dict(cache, rope_cos=rs.cos_m, rope_sin=rs.sin_m)
+        return cache
+
+    @staticmethod
+    def _write_kv(kc: jax.Array, vc: jax.Array, k: jax.Array, v: jax.Array,
+                  lengths: jax.Array):
+        """kc/vc: [B, Smax, Hkv, Dh]; k/v: [B, Hkv, Dh] written at per-row
+        position ``lengths`` (mod ring size — a full-context cache never
+        wraps; a ring cache overwrites the slot that just left the window)."""
+        r = kc.shape[1]
+        def upd(c, x, l):
+            return jax.lax.dynamic_update_slice(c, x[None], (l % r, 0, 0))
+        kc = jax.vmap(upd)(kc, k, lengths)
+        vc = jax.vmap(upd)(vc, v, lengths)
+        return kc, vc
+
+    def _decode_self_attn(self, p: Params, h: jax.Array, kc, vc,
+                          cache: Cache) -> tuple[jax.Array, jax.Array, jax.Array]:
+        cfg = self.cfg
+        b, d = h.shape
+        dh = cfg.resolved_head_dim
+        q = linear(p, "wq", h).reshape(b, cfg.n_heads, dh)
+        k = linear(p, "wk", h).reshape(b, cfg.n_kv_heads, dh)
+        v = linear(p, "wv", h).reshape(b, cfg.n_kv_heads, dh)
+        if cfg.qk_norm:
+            q = rms_norm(q, p["qn"], cfg.norm_eps)
+            k = rms_norm(k, p["kn"], cfg.norm_eps)
+        q, k = self._rope_qk_decode(cache, q, k, cache["len"])
+        kc, vc = self._write_kv(kc, vc, k.astype(kc.dtype), v.astype(vc.dtype),
+                                cache["len"])
+        if cfg.kv_ring and cfg.window:
+            out = attn_lib.decode_attention_ring(q, kc, vc, cache["len"] + 1,
+                                                 window=cfg.window)
+        else:
+            out = attn_lib.decode_attention(q, kc, vc, cache["len"] + 1,
+                                            impl=cfg.decode_impl,
+                                            window=cfg.window,
+                                            block_size=cfg.attn_block or 512)
+        return linear(p, "wo", out.reshape(b, -1)), kc, vc
+
+    def _decode_cross_attn(self, p: Params, h: jax.Array, ck, cv,
+                           source_len: jax.Array) -> jax.Array:
+        cfg = self.cfg
+        b, d = h.shape
+        dh = cfg.resolved_head_dim
+        q = linear(p, "wq", h).reshape(b, cfg.n_heads, dh)
+        if cfg.qk_norm:
+            q = rms_norm(q, p["qn"], cfg.norm_eps)
+        impl = "blockwise" if cfg.decode_impl == "sp" else cfg.decode_impl
+        out = attn_lib.decode_attention(q, ck, cv, source_len,
+                                        impl=impl,
+                                        block_size=cfg.attn_block or 512)
+        out = linear(p, "wo", out.reshape(b, -1))
+        return jnp.tanh(p["gate"]).astype(h.dtype) * out
+
+    def _decode_block(self, bp: Params, slices: dict, x: jax.Array,
+                      cache: Cache) -> tuple[jax.Array, dict]:
+        """One self block at decode time. ``slices`` holds this layer's cache
+        tensors; returns updated slices as scan ys."""
+        cfg = self.cfg
+        new = {}
+        h = rms_norm(x, bp["ln1"], cfg.norm_eps)
+        attn_out, new["k"], new["v"] = self._decode_self_attn(
+            bp["attn"], h, slices["k"], slices["v"], cache)
+        if cfg.family == "hybrid":
+            st = mamba_lib.MambaState(conv=slices["mamba_conv"],
+                                      ssm=slices["mamba_ssm"])
+            m_out, st = mamba_lib.mamba_decode_step(bp["mamba"], h, st)
+            new["mamba_conv"], new["mamba_ssm"] = st.conv, st.ssm
+            x = x + 0.5 * (rms_norm(attn_out, bp["ln_attn_out"], cfg.norm_eps)
+                           + rms_norm(m_out, bp["ln_mamba_out"], cfg.norm_eps))
+        else:
+            x = x + attn_out
+        if "cross" in bp and "cross_k" in slices:
+            hc = rms_norm(x, bp["ln_cross"], cfg.norm_eps)
+            x = x + self._decode_cross_attn(bp["cross"], hc, slices["cross_k"],
+                                            slices["cross_v"],
+                                            cache["source_len"])
+            new["cross_k"], new["cross_v"] = slices["cross_k"], slices["cross_v"]
+        h2 = rms_norm(x, bp["ln2"], cfg.norm_eps)
+        if cfg.n_experts:
+            y, _ = moe_lib.moe_apply(bp["ffn"], h2[:, None, :], top_k=cfg.top_k,
+                                     act=cfg.act, gated=cfg.gated_mlp,
+                                     capacity_factor=cfg.capacity_factor)
+            y = y[:, 0, :]
+        else:
+            y = mlp_apply(bp["ffn"], h2, cfg.act, cfg.gated_mlp)
+        return x + y, new
+
+    def decode_step(self, params: Params, tokens: jax.Array,
+                    cache: Cache) -> tuple[jax.Array, Cache]:
+        """tokens: [B] int32 -> (logits [B, V] f32, updated cache)."""
+        cfg = self.cfg
+        x = params["embed"].astype(self._dt)[tokens]             # [B, d]
+
+        if cfg.family == "ssm":
+            return self._rwkv_decode_step(params, x, cache)
+
+        n_cross = self._n_cross_groups()
+
+        def step(x, xs):
+            bp, slices = xs
+            x, new = self._decode_block(bp, slices, x, cache)
+            return x, new
+
+        self_slices = {"k": cache["k"], "v": cache["v"]}
+        if cfg.family == "hybrid":
+            self_slices["mamba_conv"] = cache["mamba_conv"]
+            self_slices["mamba_ssm"] = cache["mamba_ssm"]
+        if cfg.cross_attn_every == 1:                  # whisper-style
+            self_slices["cross_k"] = cache["cross_k"]
+            self_slices["cross_v"] = cache["cross_v"]
+
+        if not n_cross:
+            x, new = layer_scan(step, x, (params["blocks"], self_slices), unroll=cfg.unroll_layers)
+        else:
+            group = cfg.cross_attn_every
+            n_self_per = group - 1
+
+            def group_step(x, xs):
+                gp, gs, cp, ck, cv = xs
+                x, new = layer_scan(step, x, (gp, gs), unroll=cfg.unroll_layers)
+                h = rms_norm(x, cp["ln1"], cfg.norm_eps)
+                x = x + self._decode_cross_attn(cp["cross"], h, ck, cv,
+                                                cache["source_len"])
+                h2 = rms_norm(x, cp["ln2"], cfg.norm_eps)
+                x = x + mlp_apply(cp["ffn"], h2, cfg.act, cfg.gated_mlp)
+                return x, new
+
+            gp = jax.tree.map(
+                lambda a: a.reshape(n_cross, n_self_per, *a.shape[1:]),
+                params["blocks"])
+            gs = jax.tree.map(
+                lambda a: a.reshape(n_cross, n_self_per, *a.shape[1:]),
+                self_slices)
+            x, new = layer_scan(group_step, x,
+                                (gp, gs, params["cross_blocks"],
+                                 cache["cross_k"], cache["cross_v"]),
+                                unroll=cfg.unroll_layers)
+            new = jax.tree.map(
+                lambda a: a.reshape(n_cross * n_self_per, *a.shape[2:]), new)
+
+        cache = dict(cache)
+        for key in ("k", "v", "mamba_conv", "mamba_ssm"):
+            if key in new:
+                cache[key] = new[key]
+        cache["len"] = cache["len"] + 1
+        cache = self._advance_rope(cache)
+        x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+        return self._unembed(params, x), cache
+
+    # ---- prefill: full-prompt forward that also fills the cache ------------
+    def prefill(self, params: Params, tokens: jax.Array, cache: Cache,
+                source: jax.Array | None = None) -> tuple[jax.Array, Cache]:
+        """tokens: [B, Sp] (uniform prompt length — serving drivers pad to
+        length groups); returns (last-position logits [B, V] f32, filled
+        cache). Keys are cached post-RoPE (paper §IV-C)."""
+        cfg = self.cfg
+        b, sp = tokens.shape
+        x = params["embed"].astype(self._dt)[tokens]
+        positions = jnp.arange(sp)
+
+        if cfg.family == "ssm":
+            return self._rwkv_prefill(params, x, cache)
+
+        n_cross = self._n_cross_groups()
+        dh = cfg.resolved_head_dim
+
+        def kv_for(p, h, with_rope: bool):
+            k = linear(p, "wk", h).reshape(b, -1, cfg.n_kv_heads, dh)
+            v = linear(p, "wv", h).reshape(b, -1, cfg.n_kv_heads, dh)
+            if cfg.qk_norm:
+                k = rms_norm(k, p["kn"], cfg.norm_eps)
+            if with_rope and cfg.rotary_dim:
+                k = jnp.swapaxes(rope_lib.apply_rope(
+                    jnp.swapaxes(k, 1, 2), positions, cfg.rope_base,
+                    cfg.rotary_dim), 1, 2)
+            return k, v
+
+        def fill_kv(ck, kv):
+            # full cache: contiguous write at 0; ring cache: write the last
+            # R tokens at their (pos % R) slots
+            r = ck.shape[2] if ck.ndim == 5 else ck.shape[1]
+            if kv.shape[1] <= r:
+                return jax.lax.dynamic_update_slice(
+                    ck, kv.astype(ck.dtype), (0,) * ck.ndim)
+            import numpy as _np
+            m = r
+            pos = _np.arange(kv.shape[1] - m, kv.shape[1])
+            slots = pos % r
+            order = _np.argsort(slots)
+            return ck.at[:, slots[order]].set(
+                kv[:, kv.shape[1] - m:][:, order].astype(ck.dtype))
+
+        def self_step(x, xs):
+            bp, slices = xs
+            new = {}
+            h = rms_norm(x, bp["ln1"], cfg.norm_eps)
+            q = linear(bp["attn"], "wq", h).reshape(
+                b, sp, cfg.n_heads, dh)
+            if cfg.qk_norm:
+                q = rms_norm(q, bp["attn"]["qn"], cfg.norm_eps)
+            if cfg.rotary_dim:
+                q = jnp.swapaxes(rope_lib.apply_rope(
+                    jnp.swapaxes(q, 1, 2), positions, cfg.rope_base,
+                    cfg.rotary_dim), 1, 2)
+            k, v = kv_for(bp["attn"], h, with_rope=True)
+            new["k"] = fill_kv(slices["k"], k)
+            new["v"] = fill_kv(slices["v"], v)
+            attn = attn_lib.prefill_attention(q, k, v, causal=True,
+                                              window=cfg.window,
+                                              kv_block=cfg.attn_block or 512)
+            attn_out = linear(bp["attn"], "wo", attn.reshape(b, sp, -1))
+            if cfg.family == "hybrid":
+                m_out, mst = mamba_lib.mamba_forward(bp["mamba"], h,
+                                                     return_state=True)
+                new["mamba_conv"], new["mamba_ssm"] = mst.conv, mst.ssm
+                x = x + 0.5 * (rms_norm(attn_out, bp["ln_attn_out"], cfg.norm_eps)
+                               + rms_norm(m_out, bp["ln_mamba_out"], cfg.norm_eps))
+            else:
+                x = x + attn_out
+            if "cross" in bp and source is not None:
+                hc = rms_norm(x, bp["ln_cross"], cfg.norm_eps)
+                ck, cv = kv_for(bp["cross"], source.astype(h.dtype),
+                                with_rope=False)
+                new["cross_k"] = ck.astype(slices["cross_k"].dtype)
+                new["cross_v"] = cv.astype(slices["cross_v"].dtype)
+                qc = linear(bp["cross"], "wq", hc).reshape(
+                    b, sp, cfg.n_heads, dh)
+                if cfg.qk_norm:
+                    qc = rms_norm(qc, bp["cross"]["qn"], cfg.norm_eps)
+                c_out = attn_lib.prefill_attention(
+                    qc, ck, cv, causal=False,
+                    kv_block=cfg.attn_block or 512)
+                c_out = linear(bp["cross"], "wo", c_out.reshape(b, sp, -1))
+                x = x + jnp.tanh(bp["cross"]["gate"]).astype(h.dtype) * c_out
+            h2 = rms_norm(x, bp["ln2"], cfg.norm_eps)
+            if cfg.n_experts:
+                y, _ = moe_lib.moe_apply(bp["ffn"], h2, top_k=cfg.top_k,
+                                         act=cfg.act, gated=cfg.gated_mlp,
+                                         capacity_factor=cfg.capacity_factor)
+            else:
+                y = mlp_apply(bp["ffn"], h2, cfg.act, cfg.gated_mlp)
+            return x + y, new
+
+        self_slices = {"k": cache["k"], "v": cache["v"]}
+        if cfg.family == "hybrid":
+            self_slices["mamba_conv"] = cache["mamba_conv"]
+            self_slices["mamba_ssm"] = cache["mamba_ssm"]
+        if cfg.cross_attn_every == 1 and "cross_k" in cache:
+            self_slices["cross_k"] = cache["cross_k"]
+            self_slices["cross_v"] = cache["cross_v"]
+
+        if not n_cross:
+            x, new = layer_scan(self_step, x, (params["blocks"], self_slices), unroll=cfg.unroll_layers)
+        else:
+            group = cfg.cross_attn_every
+            n_self_per = group - 1
+
+            def group_step(x, xs):
+                gp, gs, cp = xs
+                x, new = layer_scan(self_step, x, (gp, gs), unroll=cfg.unroll_layers)
+                ck, cv = kv_for(cp["cross"], source.astype(x.dtype),
+                                with_rope=False)
+                h = rms_norm(x, cp["ln1"], cfg.norm_eps)
+                qc = linear(cp["cross"], "wq", h).reshape(
+                    b, sp, cfg.n_heads, dh)
+                c_out = attn_lib.prefill_attention(
+                    qc, ck, cv, causal=False,
+                    kv_block=cfg.attn_block or 512)
+                c_out = linear(cp["cross"], "wo", c_out.reshape(b, sp, -1))
+                x = x + jnp.tanh(cp["cross"]["gate"]).astype(x.dtype) * c_out
+                h2 = rms_norm(x, cp["ln2"], cfg.norm_eps)
+                x = x + mlp_apply(cp["ffn"], h2, cfg.act, cfg.gated_mlp)
+                new["cross_k"] = ck.astype(cache["cross_k"].dtype)
+                new["cross_v"] = cv.astype(cache["cross_v"].dtype)
+                return x, new
+
+            gp = jax.tree.map(
+                lambda a: a.reshape(n_cross, n_self_per, *a.shape[1:]),
+                params["blocks"])
+            gs = jax.tree.map(
+                lambda a: a.reshape(n_cross, n_self_per, *a.shape[1:]),
+                self_slices)
+            x, new = layer_scan(group_step, x, (gp, gs, params["cross_blocks"]), unroll=cfg.unroll_layers)
+            cross_new = {"cross_k": new.pop("cross_k"),
+                         "cross_v": new.pop("cross_v")}
+            new = jax.tree.map(
+                lambda a: a.reshape(n_cross * n_self_per, *a.shape[2:]), new)
+            new.update(cross_new)
+
+        cache = dict(cache)
+        for key, val in new.items():
+            cache[key] = val
+        cache["len"] = jnp.full_like(cache["len"], sp)
+        if cfg.rotary_dim and cfg.rope_mode == "incremental":
+            rs = rope_lib.rope_state_init(cfg.resolved_head_dim, cfg.rope_base,
+                                          sp, cfg.rotary_dim)
+            cache["rope_cos"] = jnp.broadcast_to(rs.cos_m, cache["rope_cos"].shape)
+            cache["rope_sin"] = jnp.broadcast_to(rs.sin_m, cache["rope_sin"].shape)
+        x = rms_norm(x[:, -1, :], params["ln_f"], cfg.norm_eps)
+        return self._unembed(params, x), cache
+
+    def _rwkv_prefill(self, params: Params, x: jax.Array,
+                      cache: Cache) -> tuple[jax.Array, Cache]:
+        cfg = self.cfg
+        b, sp, _ = x.shape
+        h_heads = cfg.d_model // cfg.rwkv_head_dim
+
+        def step(x, bp):
+            st0 = rwkv_lib.RWKVLayerState(
+                x_prev_att=jnp.zeros((b, cfg.d_model), x.dtype),
+                x_prev_ffn=jnp.zeros((b, cfg.d_model), x.dtype),
+                wkv=jnp.zeros((b, h_heads, cfg.rwkv_head_dim,
+                               cfg.rwkv_head_dim), jnp.float32))
+            h = rms_norm(x, bp["ln1"], cfg.norm_eps)
+            y, st = rwkv_lib.rwkv_time_mix(bp["mix"], h, st0, cfg.rwkv_head_dim)
+            x = x + y
+            h2 = rms_norm(x, bp["ln2"], cfg.norm_eps)
+            y2, st = rwkv_lib.rwkv_channel_mix(bp["mix"], h2, st)
+            return x + y2, (st.x_prev_att, st.x_prev_ffn, st.wkv)
+
+        x, (att, ffn, wkv) = layer_scan(step, x, params["blocks"], unroll=cfg.unroll_layers)
+        cache = dict(cache, rwkv_att=att, rwkv_ffn=ffn, rwkv_wkv=wkv,
+                     len=jnp.full_like(cache["len"], sp))
+        x = rms_norm(x[:, -1, :], params["ln_f"], cfg.norm_eps)
+        return self._unembed(params, x), cache
+
+    def _rwkv_decode_step(self, params: Params, x: jax.Array,
+                          cache: Cache) -> tuple[jax.Array, Cache]:
+        cfg = self.cfg
+
+        def step(x, xs):
+            bp, att_prev, ffn_prev, wkv = xs
+            st = rwkv_lib.RWKVLayerState(att_prev.astype(self._dt),
+                                         ffn_prev.astype(self._dt), wkv)
+            h = rms_norm(x, bp["ln1"], cfg.norm_eps)
+            y, st = rwkv_lib.rwkv_time_mix_step(bp["mix"], h, st,
+                                                cfg.rwkv_head_dim)
+            x = x + y
+            h2 = rms_norm(x, bp["ln2"], cfg.norm_eps)
+            y2, st = rwkv_lib.rwkv_channel_mix_step(bp["mix"], h2, st)
+            return x + y2, (st.x_prev_att, st.x_prev_ffn, st.wkv)
+
+        x, (att, ffn, wkv) = layer_scan(
+            step, x, (params["blocks"], cache["rwkv_att"], cache["rwkv_ffn"],
+                      cache["rwkv_wkv"]), unroll=cfg.unroll_layers)
+        cache = dict(cache, rwkv_att=att, rwkv_ffn=ffn, rwkv_wkv=wkv,
+                     len=cache["len"] + 1)
+        x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+        return self._unembed(params, x), cache

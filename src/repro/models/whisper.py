@@ -1,0 +1,55 @@
+"""Whisper-style encoder-decoder backbone (audio family).
+
+The conv/mel frontend is a STUB per the assignment: ``source`` inputs are
+precomputed frame embeddings ``[B, source_len, d_model]``. The encoder is a
+bidirectional TransformerLM stack; the decoder is causal with in-layer
+cross-attention (``cross_attn_every=1``), its cross-KV computed once at
+prefill and cached — decode then touches only the decoder stack.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .transformer import Cache, Params, TransformerLM
+
+
+class WhisperModel:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        enc_cfg = cfg.replace(family="dense", cross_attn_every=0,
+                              n_layers=cfg.encoder_layers, window=None)
+        dec_cfg = cfg.replace(family="dense", cross_attn_every=1)
+        self.encoder = TransformerLM(enc_cfg, causal=False, with_embedding=False)
+        self.decoder = TransformerLM(dec_cfg)
+
+    def init_params(self, rng) -> Params:
+        k1, k2 = jax.random.split(rng)
+        return {"encoder": self.encoder.init_params(k1),
+                "decoder": self.decoder.init_params(k2)}
+
+    def encode(self, params: Params, source: jax.Array,
+               remat: bool = True) -> jax.Array:
+        h, _ = self.encoder.forward(params["encoder"], embeds=source,
+                                    remat=remat)
+        return h
+
+    def forward(self, params: Params, tokens: jax.Array, *,
+                source: jax.Array, remat: bool = True):
+        enc = self.encode(params, source, remat)
+        return self.decoder.forward(params["decoder"], tokens, source=enc,
+                                    remat=remat)
+
+    def init_cache(self, batch: int, max_len: int,
+                   source_len: int | None = None) -> Cache:
+        return self.decoder.init_cache(batch, max_len,
+                                       source_len or self.cfg.source_len)
+
+    def prefill(self, params: Params, tokens: jax.Array, cache: Cache,
+                source: jax.Array | None = None):
+        enc = self.encode(params, source)
+        return self.decoder.prefill(params["decoder"], tokens, cache, source=enc)
+
+    def decode_step(self, params: Params, tokens: jax.Array, cache: Cache):
+        return self.decoder.decode_step(params["decoder"], tokens, cache)

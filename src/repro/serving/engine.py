@@ -1,0 +1,55 @@
+"""Batched serving engine: prefill once, then per-token decode steps — the
+paper's workload. The decode step is the jit'd unit the dry-run lowers
+(``serve_step``); the KV cache is donated so steps update in place.
+
+Batching model: requests of equal prompt length are grouped (uniform-length
+prefill; DESIGN.md notes), per-row ``len`` diverges during generation when
+requests complete early (an ``active`` mask freezes finished rows)."""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+class ServingEngine:
+    def __init__(self, model, params, *, max_len: int, batch: int,
+                 source_len: int | None = None):
+        self.model, self.params = model, params
+        self.max_len, self.batch = max_len, batch
+        self.source_len = source_len
+        self._prefill = jax.jit(model.prefill)
+        self._decode = jax.jit(model.decode_step, donate_argnums=(2,))
+
+    def new_cache(self):
+        return self.model.init_cache(self.batch, self.max_len, self.source_len)
+
+    def generate(self, prompts: jax.Array, *, steps: int,
+                 temperature: float = 0.0, rng=None,
+                 eos_id: int | None = None,
+                 source: jax.Array | None = None) -> jax.Array:
+        """prompts: [B, P] int32 (uniform length). Returns [B, steps]."""
+        b, p = prompts.shape
+        assert b == self.batch and p + steps <= self.max_len
+        rng = jax.random.PRNGKey(0) if rng is None else rng
+        cache = self.new_cache()
+        logits, cache = self._prefill(self.params, prompts, cache, source)
+        outs = []
+        active = jnp.ones((b,), bool)
+        tok = self._sample(logits, temperature, rng)
+        for t in range(steps):
+            outs.append(tok)
+            if eos_id is not None:
+                active &= tok != eos_id
+            rng, sub = jax.random.split(rng)
+            logits, cache = self._decode(self.params, tok, cache)
+            tok = jnp.where(active, self._sample(logits, temperature, sub), tok)
+        return jnp.stack(outs, axis=1)
+
+    @staticmethod
+    def _sample(logits: jax.Array, temperature: float, rng) -> jax.Array:
+        if temperature == 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(rng, logits / temperature).astype(jnp.int32)

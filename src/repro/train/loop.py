@@ -1,0 +1,95 @@
+"""Training loop with fault tolerance: periodic atomic checkpoints,
+resume-from-latest on (re)start, bounded step retries on transient failure.
+
+At cluster scale the same loop runs per-controller: a preempted job restarts,
+``CheckpointManager.latest_step()`` finds the last valid snapshot, and the
+counted data pipeline regenerates the exact step stream. ``failure_injector``
+lets tests exercise the recovery path deterministically."""
+from __future__ import annotations
+
+import logging
+import time
+from typing import Callable
+
+import jax
+
+from repro.checkpoint import CheckpointManager
+from repro.data.pipeline import batch_for_step, source_for_step
+from repro.models.api import needs_source
+from repro.optim import adamw_init
+
+log = logging.getLogger("repro.train")
+
+
+class TrainLoop:
+    def __init__(self, model, cfg, train_step: Callable, *, seq_len: int,
+                 global_batch: int, ckpt_dir: str, ckpt_every: int = 50,
+                 seed: int = 0, max_retries: int = 3,
+                 failure_injector: Callable[[int], None] | None = None):
+        self.model, self.cfg = model, cfg
+        self.train_step = jax.jit(train_step, donate_argnums=(0, 1))
+        self.seq_len, self.global_batch = seq_len, global_batch
+        self.seed = seed
+        self.ckpt = CheckpointManager(ckpt_dir)
+        self.ckpt_every = ckpt_every
+        self.max_retries = max_retries
+        self.failure_injector = failure_injector
+
+    def _batch(self, step: int) -> dict:
+        b = batch_for_step(self.cfg.vocab_size, self.seq_len,
+                           self.global_batch, self.seed, step)
+        if needs_source(self.cfg):
+            b["source"] = source_for_step(self.cfg, self.global_batch,
+                                          self.seed, step)
+        return b
+
+    def init_or_resume(self, rng):
+        params = self.model.init_params(rng)
+        opt_state = adamw_init(params)
+        start = 0
+        latest = self.ckpt.latest_step()
+        if latest is not None:
+            (params, opt_state), start, _ = self.ckpt.restore(
+                (params, opt_state), latest)
+            log.info("resumed from checkpoint step %d", start)
+        return params, opt_state, start
+
+    def run(self, steps: int, rng=None) -> list[dict]:
+        rng = jax.random.PRNGKey(self.seed) if rng is None else rng
+        params, opt_state, start = self.init_or_resume(rng)
+        history = []
+        step = start
+        while step < steps:
+            retries = 0
+            while True:
+                try:
+                    if self.failure_injector is not None:
+                        self.failure_injector(step)
+                    t0 = time.perf_counter()
+                    params, opt_state, metrics = self.train_step(
+                        params, opt_state, self._batch(step))
+                    metrics = {k: float(v) for k, v in metrics.items()}
+                    metrics["step_time_s"] = time.perf_counter() - t0
+                    break
+                except Exception as e:  # transient failure -> restore + retry
+                    retries += 1
+                    log.warning("step %d failed (%s); retry %d/%d", step, e,
+                                retries, self.max_retries)
+                    if retries > self.max_retries:
+                        raise
+                    latest = self.ckpt.latest_step()
+                    if latest is not None:
+                        (params, opt_state), step, _ = self.ckpt.restore(
+                            jax.tree.map(lambda x: x, (params, opt_state)),
+                            latest)
+                    else:  # restart from scratch deterministically
+                        params, opt_state, step = (*self.init_or_resume(rng)[:2],
+                                                   0)
+            metrics["step"] = step
+            history.append(metrics)
+            step += 1
+            if step % self.ckpt_every == 0 or step == steps:
+                self.ckpt.save(step, (params, opt_state),
+                               extra={"seq_len": self.seq_len})
+        self._final = (params, opt_state)
+        return history

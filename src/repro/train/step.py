@@ -1,0 +1,88 @@
+"""Training step: value_and_grad + AdamW, with microbatched gradient
+accumulation (activation-memory control for the big dry-run cells — the
+global batch splits into ``microbatches`` sequential chunks, grads average)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.api import lm_loss
+from repro.optim import adamw_update, cosine_schedule
+
+
+def _constrain(tree, spec_tree):
+    """Pin a param-shaped pytree to the params' PartitionSpecs (keeps the
+    grad-accumulation carry FSDP-sharded instead of letting XLA replicate
+    tens of GB of f32 gradients). No-op when spec_tree is None or outside a
+    mesh context."""
+    if spec_tree is None:
+        return tree
+    try:
+        return jax.tree.map(
+            lambda x, s: jax.lax.with_sharding_constraint(x, s), tree,
+            spec_tree)
+    except Exception:
+        return tree
+
+
+def make_train_step(model, *, microbatches: int = 1, base_lr: float = 3e-4,
+                    warmup: int = 100, total_steps: int = 10_000,
+                    weight_decay: float = 0.1, remat: bool = True,
+                    param_specs=None, bf16_gather: bool = False):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics). ``batch``: {tokens, labels[, source]} with global-batch leading.
+    ``param_specs``: optional PartitionSpec pytree matching params — applied
+    to gradients/accumulators so they shard with the params (FSDP).
+    ``bf16_gather``: cast f32 master params to the compute dtype while still
+    FSDP-sharded, so the per-layer all-gathers move bf16 instead of f32 —
+    halves FSDP collective traffic (beyond-paper perf lever, §Perf)."""
+
+    cdt = jnp.dtype(model.cfg.compute_dtype)
+
+    def loss_fn(params, batch):
+        if bf16_gather:
+            params = _constrain(
+                jax.tree.map(
+                    lambda p: p.astype(cdt) if (p.dtype == jnp.float32
+                                                and p.ndim >= 2) else p,
+                    params),
+                param_specs)
+        return lm_loss(model, params, batch["tokens"], batch["labels"],
+                       batch.get("source"), remat=remat)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            grads = _constrain(grads, param_specs)
+        else:
+            def split(x):
+                return x.reshape(microbatches, x.shape[0] // microbatches,
+                                 *x.shape[1:])
+            mb = jax.tree.map(split, batch)
+
+            def acc(carry, one):
+                loss_acc, grads_acc = carry
+                loss, grads = jax.value_and_grad(loss_fn)(params, one)
+                grads_acc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32), grads_acc, grads)
+                return (loss_acc + loss,
+                        _constrain(grads_acc, param_specs)), None
+
+            zeros = _constrain(
+                jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                             params), param_specs)
+            (loss, grads), _ = jax.lax.scan(acc, (jnp.zeros((), jnp.float32),
+                                                  zeros), mb)
+            loss = loss / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+
+        lr = cosine_schedule(opt_state.step, base_lr=base_lr, warmup=warmup,
+                             total=total_steps)
+        params, opt_state, metrics = adamw_update(
+            params, grads, opt_state, lr=lr, weight_decay=weight_decay)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return train_step

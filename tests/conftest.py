@@ -1,0 +1,21 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests must see the 1-device
+world; only launch/dryrun.py forces 512 host devices (in its own process)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def random_qkv(rng, *, b=2, hq=4, hkv=2, s=128, d=32, dtype=jnp.float32):
+    q = jnp.asarray(rng.standard_normal((b, hq, d)), dtype)
+    k = jnp.asarray(rng.standard_normal((b, s, hkv, d)), dtype)
+    v = jnp.asarray(rng.standard_normal((b, s, hkv, d)), dtype)
+    lengths = jnp.asarray(rng.integers(1, s + 1, (b,)), jnp.int32)
+    return q, k, v, lengths

@@ -1,0 +1,162 @@
+"""Paper numerics: the Eq. 9-10 LUT exponential (max rel error 0.00586%),
+the Q15.17 fixed-point datapath, and W4A8 quantization."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import exp2_lut, fixedpoint, quantization
+from repro.core.swiftkv import softmax_attention_reference
+
+# ---------------------------------------------------------------------------
+# LUT exponential (Eqs. 9-10)
+# ---------------------------------------------------------------------------
+
+PAPER_LUT_ERR = 5.86e-5  # "maximum relative error is 0.00586%"
+
+
+def test_lut_exp_error_reproduces_paper_bound():
+    err = exp2_lut.max_relative_error()
+    # reproduce the figure (small slack for the grid / float32 eval)
+    assert err < PAPER_LUT_ERR * 1.05, err
+    assert err > PAPER_LUT_ERR * 0.5, f"suspiciously low: {err}"
+
+
+@settings(max_examples=80, deadline=None)
+@given(st.floats(min_value=-40.0, max_value=0.0, allow_nan=False))
+def test_exp_lut_matches_exp(x):
+    got = float(exp2_lut.exp_lut(jnp.float32(x)))
+    want = float(np.exp(np.float32(x)))
+    assert got == pytest.approx(want, rel=2e-4, abs=1e-12)
+
+
+@settings(max_examples=80, deadline=None)
+@given(st.floats(min_value=-0.999, max_value=0.0, allow_nan=False))
+def test_fxp_lut_exp_bit_path(x):
+    x_fxp = fixedpoint.to_fxp(np.float64(x))
+    got = float(exp2_lut.exp_lut_fxp(x_fxp)) / (1 << exp2_lut.FRAC_BITS)
+    assert got == pytest.approx(float(np.exp(x)), rel=3e-4, abs=2e-5)
+
+
+def test_lut_table_values():
+    vals, slopes = exp2_lut.make_lut()
+    assert len(vals) == 32
+    np.testing.assert_allclose(vals, 2.0 ** (-np.arange(32) / 32), rtol=1e-12)
+    # slopes interpolate toward the next entry (LUT[32] = 0.5)
+    np.testing.assert_allclose(vals + slopes,
+                               2.0 ** (-np.arange(1, 33) / 32), rtol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# Q15.17 fixed point
+# ---------------------------------------------------------------------------
+
+ULP = 1.0 / (1 << 17)
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.floats(min_value=-1e4, max_value=1e4, allow_nan=False))
+def test_fxp_roundtrip(x):
+    got = fixedpoint.from_fxp(fixedpoint.to_fxp(x))
+    assert abs(got - x) <= ULP / 2 + 1e-12
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.floats(min_value=-100, max_value=100),
+       st.floats(min_value=-100, max_value=100))
+def test_fxp_mul(a, b):
+    got = fixedpoint.from_fxp(
+        fixedpoint.fxp_mul(fixedpoint.to_fxp(a), fixedpoint.to_fxp(b)))
+    assert got == pytest.approx(a * b, abs=(abs(a) + abs(b) + 1) * ULP)
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.floats(min_value=-100, max_value=100),
+       st.floats(min_value=0.01, max_value=100))
+def test_fxp_div(a, b):
+    got = fixedpoint.from_fxp(
+        fixedpoint.fxp_div(fixedpoint.to_fxp(a), fixedpoint.to_fxp(b)))
+    # compare against the exact quotient of the *quantized* operands — the
+    # divider itself is round-to-nearest; input quantization of b dominates
+    aq = fixedpoint.from_fxp(fixedpoint.to_fxp(a))
+    bq = fixedpoint.from_fxp(fixedpoint.to_fxp(b))
+    assert got == pytest.approx(aq / bq, abs=2 * ULP)
+
+
+def test_fxp32_attention_precision_claim():
+    """§III: FXP32 attention 'precision better than 1e-5'. We measure both
+    max and mean absolute error of the full Q15.17 datapath (scores, LUT exp,
+    running state, deferred divide) vs the f32 two-pass oracle."""
+    rng = np.random.default_rng(0)
+    errs = []
+    for trial in range(5):
+        d, s = 64, 128
+        q = rng.standard_normal(d)
+        k = rng.standard_normal((s, d))
+        v = rng.standard_normal((s, d))
+        got = fixedpoint.swiftkv_attention_fxp(q, k, v)
+        want = np.asarray(softmax_attention_reference(
+            jnp.asarray(q, jnp.float32), jnp.asarray(k, jnp.float32),
+            jnp.asarray(v, jnp.float32)))
+        errs.append(np.abs(got - want))
+    errs = np.concatenate(errs)
+    assert errs.mean() < 1e-5, errs.mean()     # paper's claim, on average
+    assert errs.max() < 4 * ULP                # within a few fixed-point ulps
+
+
+# ---------------------------------------------------------------------------
+# W4A8 quantization
+# ---------------------------------------------------------------------------
+
+def test_w4_pack_unpack_roundtrip():
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.standard_normal((256, 32)), jnp.float32)
+    qw = quantization.quantize_w4(w)
+    assert qw.packed.shape == (256, 16) and qw.packed.dtype == jnp.uint8
+    assert qw.scale.shape == (256 // quantization.GROUP, 32)
+    unpacked = quantization.unpack_w4(qw.packed)
+    assert unpacked.shape == (256, 32)
+    assert int(jnp.min(unpacked)) >= -8 and int(jnp.max(unpacked)) <= 7
+    # dequantized weight within half a quant step per element (per group) —
+    # except entries saturated by the MSE-optimal clip (error = |w| - 7*step)
+    deq = quantization.dequantize_w4(qw)
+    step = np.repeat(np.asarray(qw.scale), quantization.GROUP, axis=0)
+    err = np.abs(np.asarray(deq - w))
+    bound = np.maximum(step * 0.5, np.abs(np.asarray(w)) - 7.0 * step)
+    assert np.all(err <= bound + 1e-7)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(min_value=0, max_value=2**31 - 1))
+def test_w4_nibble_packing_exact(seed):
+    rng = np.random.default_rng(seed)
+    q = rng.integers(-8, 8, size=(8, 10)).astype(np.int8)
+    lo = (q[:, 0::2].astype(np.uint8) & 0xF)
+    hi = (q[:, 1::2].astype(np.uint8) & 0xF) << 4
+    packed = jnp.asarray(lo | hi, jnp.uint8)
+    out = np.asarray(quantization.unpack_w4(packed))
+    np.testing.assert_array_equal(out, q)
+
+
+def test_a8_quantization_error():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((4, 256)), jnp.float32)
+    xq, xs = quantization.quantize_a8(x)
+    back = xq.astype(jnp.float32) * xs
+    assert float(jnp.max(jnp.abs(back - x))) <= float(jnp.max(xs)) * 0.51
+
+
+def test_w4a8_matmul_close_to_float():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((4, 512)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((512, 128)) * 0.02, jnp.float32)
+    qw = quantization.quantize_w4(w)
+    got = quantization.w4a8_matmul_ref(x, qw)
+    want = x @ w
+    rel = float(jnp.linalg.norm(got - want) / jnp.linalg.norm(want))
+    # RTN int4 on gaussian weights floors at ~10.5% relative (MSE-optimal
+    # clip); real checkpoints do better, random inits don't.
+    assert rel < 0.13, rel

@@ -1,0 +1,90 @@
+"""Mamba (hybrid branch) and RWKV6: the full-sequence (training) path and the
+O(1)-state decode path must produce identical outputs step by step — this is
+the property that lets ssm/hybrid archs run the 500k-context decode shape."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import mamba, rwkv6
+
+
+def test_mamba_forward_vs_decode_steps():
+    d, s, b = 16, 10, 2
+    p = mamba.mamba_init(jax.random.PRNGKey(0), d, state=4, conv=4, expand=2)
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, s, d)) * 0.5
+
+    full = mamba.mamba_forward(p, x)
+
+    st = mamba.mamba_init_state(p, b)
+    outs = []
+    for t in range(s):
+        y, st = mamba.mamba_decode_step(p, x[:, t, :], st)
+        outs.append(y)
+    stepped = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(stepped),
+                               atol=1e-4, rtol=1e-3)
+
+
+def test_mamba_forward_return_state_matches_decode_state():
+    d, s, b = 16, 6, 1
+    p = mamba.mamba_init(jax.random.PRNGKey(0), d, state=4)
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, s, d)) * 0.5
+    _, st_full = mamba.mamba_forward(p, x, return_state=True)
+    st = mamba.mamba_init_state(p, b)
+    for t in range(s):
+        _, st = mamba.mamba_decode_step(p, x[:, t, :], st)
+    np.testing.assert_allclose(np.asarray(st_full.ssm), np.asarray(st.ssm),
+                               atol=1e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(st_full.conv), np.asarray(st.conv),
+                               atol=1e-5)
+
+
+def test_rwkv_time_mix_forward_vs_steps():
+    d, s, b, hd = 32, 8, 2, 16
+    p = rwkv6.rwkv_layer_init(jax.random.PRNGKey(0), d, 64, hd)
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, s, d)) * 0.5
+    h = d // hd
+    st0 = rwkv6.RWKVLayerState(
+        x_prev_att=jnp.zeros((b, d)), x_prev_ffn=jnp.zeros((b, d)),
+        wkv=jnp.zeros((b, h, hd, hd), jnp.float32))
+
+    full, st_full = rwkv6.rwkv_time_mix(p, x, st0, hd)
+
+    st = st0
+    outs = []
+    for t in range(s):
+        y, st = rwkv6.rwkv_time_mix_step(p, x[:, t, :], st, hd)
+        outs.append(y)
+    stepped = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(stepped),
+                               atol=1e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(st_full.wkv), np.asarray(st.wkv),
+                               atol=1e-4, rtol=1e-3)
+
+
+def test_rwkv_channel_mix_forward_vs_steps():
+    d, s, b = 32, 8, 2
+    p = rwkv6.rwkv_layer_init(jax.random.PRNGKey(0), d, 64, 16)
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, s, d)) * 0.5
+    st0 = rwkv6.RWKVLayerState(
+        x_prev_att=jnp.zeros((b, d)), x_prev_ffn=jnp.zeros((b, d)),
+        wkv=jnp.zeros((b, 2, 16, 16), jnp.float32))
+    full, _ = rwkv6.rwkv_channel_mix(p, x, st0)
+    st = st0
+    outs = []
+    for t in range(s):
+        y, st = rwkv6.rwkv_channel_mix_step(p, x[:, t, :], st)
+        outs.append(y)
+    np.testing.assert_allclose(np.asarray(full),
+                               np.asarray(jnp.stack(outs, 1)),
+                               atol=1e-4, rtol=1e-3)
+
+
+def test_rwkv_decay_in_unit_interval():
+    d = 32
+    p = rwkv6.rwkv_layer_init(jax.random.PRNGKey(0), d, 64, 16)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, d)) * 2
+    w = rwkv6._decay(p, x)
+    assert float(w.min()) > 0.0 and float(w.max()) < 1.0

@@ -1,0 +1,172 @@
+"""SwiftKV recurrence (paper Eqs. 5-8): exactness vs two-pass softmax, the
+branchy/fused equivalence, and the monoid-merge property that justifies the
+blockwise kernel and the cross-device sequence-parallel decode."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import swiftkv
+from repro.core.swiftkv import (SwiftKVState, state_finalize, state_init,
+                                state_merge, state_update_block)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(key, *shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+@pytest.mark.parametrize("s,d", [(1, 8), (7, 16), (64, 32), (200, 64)])
+def test_tokenwise_matches_softmax(s, d):
+    q, k, v = _rand(0, d), _rand(1, s, d), _rand(2, s, d)
+    got = swiftkv.swiftkv_decode_tokenwise(q, k, v)
+    want = swiftkv.softmax_attention_reference(q, k, v)
+    np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+@pytest.mark.parametrize("branchy", [True, False])
+def test_branchy_and_fused_agree(branchy):
+    """Eq. (6)/(7)'s two branches == the fused max-form rewrite."""
+    q, k, v = _rand(0, 32), _rand(1, 50, 32), _rand(2, 50, 32)
+    got = swiftkv.swiftkv_decode_tokenwise(q, k, v, branchy=branchy)
+    want = swiftkv.softmax_attention_reference(q, k, v)
+    np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+@pytest.mark.parametrize("block", [1, 3, 16, 64, 512])
+def test_blockwise_matches_softmax_any_block(block):
+    q, k, v = _rand(0, 16), _rand(1, 100, 16), _rand(2, 100, 16)
+    got = swiftkv.swiftkv_decode_blockwise(q, k, v, block_size=block)
+    want = swiftkv.softmax_attention_reference(q, k, v)
+    np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+@pytest.mark.parametrize("length", [1, 33, 100])
+def test_length_masking(length):
+    q, k, v = _rand(0, 16), _rand(1, 100, 16), _rand(2, 100, 16)
+    got = swiftkv.swiftkv_decode_blockwise(q, k, v, jnp.asarray(length),
+                                           block_size=32)
+    want = swiftkv.softmax_attention_reference(q, k[:length], v[:length])
+    np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+@pytest.mark.parametrize("window", [1, 16, 99, 1000])
+def test_sliding_window(window):
+    q, k, v = _rand(0, 16), _rand(1, 128, 16), _rand(2, 128, 16)
+    got = swiftkv.swiftkv_decode_blockwise(q, k, v, window=window,
+                                           block_size=32)
+    want = swiftkv.softmax_attention_reference(q, k, v, window=window)
+    np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+def test_tokenwise_equals_blockwise_bitwise_structure():
+    """Same math at different granularity: agree to fp tolerance."""
+    q, k, v = _rand(0, 64), _rand(1, 300, 64), _rand(2, 300, 64)
+    a = swiftkv.swiftkv_decode_tokenwise(q, k, v)
+    b = swiftkv.swiftkv_decode_blockwise(q, k, v, block_size=128)
+    np.testing.assert_allclose(a, b, atol=1e-5)
+
+
+def test_sharded_reference_exact():
+    q = _rand(0, 32)
+    ks = [_rand(1, 64, 32), _rand(2, 64, 32), _rand(3, 64, 32)]
+    vs = [_rand(4, 64, 32), _rand(5, 64, 32), _rand(6, 64, 32)]
+    lens = [64, 64, 20]
+    got = swiftkv.swiftkv_decode_sharded_reference(q, ks, vs, lens)
+    k_all = jnp.concatenate([ks[0], ks[1], ks[2][:20]])
+    v_all = jnp.concatenate([vs[0], vs[1], vs[2][:20]])
+    want = swiftkv.softmax_attention_reference(q, k_all, v_all)
+    np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Monoid properties (hypothesis): this is what licenses blockwise kernels and
+# the cross-device merge — associativity, commutativity, identity.
+# ---------------------------------------------------------------------------
+
+def _mk_state(mu, z, y):
+    return SwiftKVState(mu=jnp.float32(mu), z=jnp.float32(z),
+                        y=jnp.asarray(y, jnp.float32))
+
+
+finite = st.floats(min_value=-30, max_value=30, allow_nan=False,
+                   allow_infinity=False)
+pos = st.floats(min_value=1e-3, max_value=1e3, allow_nan=False)
+vec3 = st.lists(finite, min_size=3, max_size=3)
+
+
+@settings(max_examples=60, deadline=None)
+@given(finite, pos, vec3, finite, pos, vec3)
+def test_merge_commutative(m1, z1, y1, m2, z2, y2):
+    a, b = _mk_state(m1, z1, y1), _mk_state(m2, z2, y2)
+    ab, ba = state_merge(a, b), state_merge(b, a)
+    np.testing.assert_allclose(ab.z, ba.z, rtol=1e-5)
+    np.testing.assert_allclose(ab.y, ba.y, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=60, deadline=None)
+@given(finite, pos, vec3, finite, pos, vec3, finite, pos, vec3)
+def test_merge_associative(m1, z1, y1, m2, z2, y2, m3, z3, y3):
+    a, b, c = _mk_state(m1, z1, y1), _mk_state(m2, z2, y2), _mk_state(m3, z3, y3)
+    left = state_merge(state_merge(a, b), c)
+    right = state_merge(a, state_merge(b, c))
+    np.testing.assert_allclose(left.z, right.z, rtol=1e-4)
+    np.testing.assert_allclose(left.y, right.y, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=30, deadline=None)
+@given(finite, pos, vec3)
+def test_merge_identity(m, z, y):
+    a = _mk_state(m, z, y)
+    e = state_init(3)  # (NEG_INF, 0, 0) is the monoid identity
+    out = state_merge(a, e)
+    # atol floor: XLA flushes f32 subnormals to zero under the 1.0x multiply
+    np.testing.assert_allclose(out.z, a.z, rtol=1e-6, atol=1e-38)
+    np.testing.assert_allclose(out.y, a.y, rtol=1e-6, atol=1e-38)
+    out2 = state_merge(e, a)
+    np.testing.assert_allclose(out2.z, a.z, rtol=1e-6, atol=1e-38)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(min_value=1, max_value=6), st.integers(min_value=0, max_value=2**31 - 1))
+def test_split_fold_equals_full_fold(n_splits, seed):
+    """Folding a score stream in arbitrary split points + merging == one
+    fold. This is the exact property the sequence-parallel decode relies on."""
+    rng = np.random.default_rng(seed)
+    s, d = 48, 8
+    scores = jnp.asarray(rng.standard_normal((s,)), jnp.float32)
+    vals = jnp.asarray(rng.standard_normal((s, d)), jnp.float32)
+    ones = jnp.ones((s,), jnp.float32)
+
+    full = state_update_block(state_init(d), scores, vals, ones)
+
+    cuts = sorted(rng.choice(np.arange(1, s), size=n_splits - 1,
+                             replace=False).tolist()) if n_splits > 1 else []
+    bounds = [0, *cuts, s]
+    acc = state_init(d)
+    for lo, hi in zip(bounds[:-1], bounds[1:]):
+        part = state_update_block(state_init(d), scores[lo:hi], vals[lo:hi],
+                                  ones[: hi - lo])
+        acc = state_merge(acc, part)
+
+    np.testing.assert_allclose(state_finalize(acc), state_finalize(full),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_alpha_beta_in_unit_interval():
+    """The paper's hardware-friendliness claim: every exponential argument is
+    <= 0, so alpha, beta lie in (0, 1]. Checked on a long random stream with
+    the paper's initialization mu_1 = s_1 (Eq. 6/7 never see -inf)."""
+    rng = np.random.default_rng(1)
+    s = jnp.asarray(rng.standard_normal(500) * 10, jnp.float32)
+    mu = float(s[0])                 # paper: mu_1 = s_1
+    for t in range(1, 500):
+        mu_new = max(mu, float(s[t]))
+        alpha = np.exp(mu - mu_new)
+        beta = np.exp(float(s[t]) - mu_new)
+        assert 0 < alpha <= 1 and 0 < beta <= 1
+        mu = mu_new
