@@ -1,0 +1,175 @@
+"""Serving benchmark: continuous batching vs the lock-step baseline.
+
+Replays the same ragged Poisson trace (mixed prompt / output lengths)
+through both engines and compares useful-token throughput:
+
+* **lock-step** — FIFO groups of ``n_slots`` requests through
+  ``ServingEngine``: prompts right-padded to a uniform length, every group
+  decodes for its longest member's budget (the padding + convoy waste this
+  subsystem exists to remove);
+* **continuous** — ``ContinuousBatchingEngine``: chunked slot prefill,
+  per-slot retirement, immediate backfill.
+
+Both engines run the same jit'd model; tokens are counted as each request's
+``max_new_tokens`` (useful tokens only — lock-step's over-generated padding
+rows don't count). Emits a ``BENCH_serving.json`` summary.
+
+    PYTHONPATH=src python benchmarks/serving_bench.py --reduced
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models.api import build_model
+from repro.serving import ContinuousBatchingEngine, ServingEngine, poisson_trace
+
+SPEEDUP_TARGET = 1.3
+
+
+def lockstep_runner(model, params, trace, *, n_slots, max_len, pad_id=0):
+    """One timed lock-step pass: FIFO groups of ``n_slots``, prompts padded
+    to the trace-wide max (one prefill compile), each group decoding
+    max(max_new) steps. Returns a closure so passes can interleave with the
+    continuous engine's (shared host-load phases hit both fairly)."""
+    eng = ServingEngine(model, params, max_len=max_len, batch=n_slots)
+    pmax = max(len(r.prompt) for r in trace)
+    # warmup/compile with the shapes the timed loop uses
+    eng.generate(jnp.full((n_slots, pmax), pad_id, jnp.int32), steps=2)
+
+    def one_pass():
+        t0 = time.perf_counter()
+        useful = 0
+        for i in range(0, len(trace), n_slots):
+            group = trace[i:i + n_slots]
+            prompts = np.full((n_slots, pmax), pad_id, np.int32)
+            for j, r in enumerate(group):
+                prompts[j, :len(r.prompt)] = r.prompt  # right-pad to uniform
+            steps = max(r.max_new_tokens for r in group)
+            out = eng.generate(jnp.asarray(prompts), steps=steps)
+            jax.block_until_ready(out)
+            useful += sum(r.max_new_tokens for r in group)
+        wall = time.perf_counter() - t0
+        return {"wall_s": round(wall, 3),
+                "tokens_per_s": round(useful / wall, 1),
+                "useful_tokens": useful,
+                "groups": -(-len(trace) // n_slots),
+                "padded_prompt_len": pmax}
+    return one_pass
+
+
+def continuous_runner(model, params, trace, *, n_slots, max_len, chunk, seed):
+    eng = ContinuousBatchingEngine(model, params, n_slots=n_slots,
+                                   max_len=max_len, chunk=chunk, seed=seed)
+    eng.warmup()
+    return lambda: eng.run([r for r in trace])["aggregate"]
+
+
+def best_of_interleaved(runners: dict, repeats: int) -> dict:
+    """Alternate one pass per engine, ``repeats`` rounds; keep each engine's
+    fastest pass. Interleaving means a slow host phase degrades the same
+    round of every engine instead of one engine's whole measurement."""
+    best: dict = {}
+    for _ in range(repeats):
+        for name, one_pass in runners.items():
+            res = one_pass()
+            if name not in best or res["wall_s"] < best[name]["wall_s"]:
+                best[name] = res
+    return best
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama2-7b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--n-slots", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=32,
+                    help="trace length; short traces make the tail-drain "
+                         "phase (slots emptying) dominate occupancy")
+    ap.add_argument("--max-len", type=int, default=256)
+    ap.add_argument("--chunk", type=int, default=32,
+                    help="prefill chunk; 32 halves per-chunk call overhead "
+                         "vs 16 on this trace's prompt mix")
+    ap.add_argument("--prompt-min", type=int, default=8)
+    ap.add_argument("--prompt-max", type=int, default=48)
+    ap.add_argument("--gen-min", type=int, default=4)
+    ap.add_argument("--gen-max", type=int, default=128)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--repeats", type=int, default=3,
+                    help="timed passes per engine; best taken")
+    ap.add_argument("--json", default="BENCH_serving.json")
+    ap.add_argument("--check", action="store_true",
+                    help=f"exit non-zero unless speedup >= {SPEEDUP_TARGET}x")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, reduced=args.reduced)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    trace = poisson_trace(
+        n_requests=args.requests, vocab_size=cfg.vocab_size,
+        prompt_len=(args.prompt_min, args.prompt_max),
+        max_new=(args.gen_min, args.gen_max), seed=args.seed)
+    # both engines must see the identical feasible workload: a request the
+    # continuous engine would reject (slot capacity), or whose budget plus
+    # the trace-wide padded prompt trips lock-step's p + steps <= max_len
+    # assert, skews the comparison
+    feasible = [r for r in trace
+                if len(r.prompt) + r.max_new_tokens <= args.max_len - 1]
+    pmax = max((len(r.prompt) for r in feasible), default=0)
+    feasible = [r for r in feasible
+                if pmax + r.max_new_tokens <= args.max_len]
+    if len(feasible) < len(trace):
+        print(f"  [note] dropped {len(trace) - len(feasible)} requests "
+              f"exceeding max_len {args.max_len} budget")
+    trace = feasible
+
+    print(f"[serving_bench] {cfg.name} reduced={args.reduced} "
+          f"slots={args.n_slots} requests={len(trace)}")
+    best = best_of_interleaved({
+        "lockstep": lockstep_runner(model, params, trace,
+                                    n_slots=args.n_slots,
+                                    max_len=args.max_len),
+        "continuous": continuous_runner(model, params, trace,
+                                        n_slots=args.n_slots,
+                                        max_len=args.max_len,
+                                        chunk=args.chunk, seed=args.seed),
+    }, args.repeats)
+    lock, cont = best["lockstep"], best["continuous"]
+    print(f"  lock-step:  {lock['tokens_per_s']:8.1f} tok/s "
+          f"({lock['wall_s']}s, {lock['groups']} groups padded to "
+          f"{lock['padded_prompt_len']})")
+    print(f"  continuous: {cont['tokens_per_s']:8.1f} tok/s "
+          f"({cont['wall_s']}s, occupancy {cont['mean_occupancy']}, "
+          f"ttft p50 {cont['ttft_p50_s']}s)")
+
+    speedup = round(cont["tokens_per_s"] / lock["tokens_per_s"], 3)
+    status = "PASS" if speedup >= SPEEDUP_TARGET else "MISS"
+    print(f"  speedup: {speedup}x (target {SPEEDUP_TARGET}x) [{status}]")
+
+    result = {
+        "bench": "serving_continuous_vs_lockstep",
+        "arch": cfg.name, "reduced": args.reduced,
+        "n_slots": args.n_slots, "n_requests": len(trace),
+        "max_len": args.max_len, "chunk": args.chunk,
+        "prompt_len": [args.prompt_min, args.prompt_max],
+        "max_new": [args.gen_min, args.gen_max],
+        "lockstep": lock, "continuous": cont,
+        "speedup_tokens_per_s": speedup,
+        "speedup_target": SPEEDUP_TARGET,
+    }
+    out = Path(args.json)
+    out.write_text(json.dumps(result, indent=1))
+    print(f"wrote {out}")
+    return 0 if (speedup >= SPEEDUP_TARGET or not args.check) else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

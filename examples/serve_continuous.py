@@ -1,0 +1,55 @@
+"""Continuous-batching serving example (CPU-runnable).
+
+A ragged Poisson trace flows through the slot pool -> scheduler -> chunked
+prefill -> ragged decode pipeline: requests of mixed prompt/output lengths
+share a fixed pool of KV slots, retire mid-flight, and freed slots backfill
+from the admission queue — while the jit'd decode step keeps one static
+batch shape throughout.
+
+Run:  PYTHONPATH=src python examples/serve_continuous.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models.api import build_model
+from repro.serving import (ContinuousBatchingEngine, ServingEngine,
+                           poisson_trace)
+
+
+def main():
+    cfg = get_config("llama2-7b", reduced=True)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+
+    trace = poisson_trace(n_requests=8, vocab_size=cfg.vocab_size,
+                          prompt_len=(4, 24), max_new=(3, 16), seed=7)
+    eng = ContinuousBatchingEngine(model, params, n_slots=3, max_len=64,
+                                   chunk=8)
+    eng.warmup()
+    report = eng.run(trace)
+
+    agg = report["aggregate"]
+    print(f"{agg['n_retired']} requests, {agg['generated_tokens']} tokens, "
+          f"{agg['tokens_per_s']} tok/s, occupancy {agg['mean_occupancy']}, "
+          f"ttft p50 {agg['ttft_p50_s']}s")
+    for r in sorted(report["requests"], key=lambda r: r["rid"]):
+        print(f"  req {r['rid']}: prompt {r['prompt_len']:3d} -> "
+              f"{r['n_tokens']:3d} tokens ({r['finish_reason']}) "
+              f"{r['tokens'][:6]}{'...' if r['n_tokens'] > 6 else ''}")
+
+    # spot-check: continuous output == single-request lock-step (greedy)
+    ref_eng = ServingEngine(model, params, max_len=64, batch=1)
+    req = trace[0]
+    ref = np.asarray(ref_eng.generate(
+        jnp.asarray(req.prompt)[None], steps=req.max_new_tokens))[0]
+    got = next(r["tokens"] for r in report["requests"]
+               if r["rid"] == req.rid)
+    same = got == ref.tolist()
+    print("continuous == per-request greedy (req 0):", same)
+    assert same
+
+
+if __name__ == "__main__":
+    main()

@@ -27,6 +27,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.quantization import GROUP
+from repro.kernels.pallas_compat import CompilerParams
 
 
 def _kernel(x_ref, wp_ref, xs_ref, ws_ref, o_ref, acc_scr, *, n_k: int,
@@ -87,7 +88,7 @@ def gemv_w4a8_pallas(x, w_packed, x_scale, w_scale, *, block_m: int = 8,
         out_specs=pl.BlockSpec((block_m, block_n), lambda im, jn, ik: (im, jn)),
         scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, w_packed, x_scale, w_scale)

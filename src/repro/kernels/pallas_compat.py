@@ -1,0 +1,15 @@
+"""Version-compat shims for the Pallas TPU API.
+
+The TPU compiler-params class was renamed across jax releases:
+``pltpu.TPUCompilerParams`` (0.4.x) became ``pltpu.CompilerParams`` (newer
+releases drop the prefix; some ship both with one deprecated). Kernels import
+the resolved name from here so they lower on whichever jax the image bakes in.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams")
+
+__all__ = ["CompilerParams"]

@@ -31,6 +31,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.exp2_lut import LOG2_E, LUT_SIZE, make_lut
 from repro.core.swiftkv import NEG_INF
+from repro.kernels.pallas_compat import CompilerParams
 
 _LUT_VALS, _LUT_SLOPES = make_lut()
 
@@ -155,7 +156,7 @@ def swiftkv_decode_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((bsz, hkv, g, d), q.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(lengths, *operands)

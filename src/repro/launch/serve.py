@@ -1,11 +1,19 @@
 """Serving driver: prefill + per-token decode (the paper's workload).
 
-Runs the ``ServingEngine`` over host devices (reduced configs) or a
-production mesh. The decode step is the unit the dry-run lowers for the
-``decode_*`` shape cells; here it actually executes and reports tokens/s.
+Two modes over host devices (reduced configs) or a production mesh:
+
+* **lock-step** (default) — the ``ServingEngine`` batch: uniform-length
+  prompts, prefill once, decode in lock-step. The decode step is the unit
+  the dry-run lowers for the ``decode_*`` shape cells.
+* **continuous** (``--continuous``) — the ragged continuous-batching
+  subsystem (``repro.serving.continuous``): KV slot pool + request
+  scheduler + chunked slot prefill, driven by a Poisson or file trace, with
+  per-request TTFT / inter-token latency and slot-occupancy metrics.
 
     PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --reduced \
         --batch 4 --prompt-len 32 --gen 64
+    PYTHONPATH=src python -m repro.launch.serve --arch llama2-7b --reduced \
+        --continuous --requests 16 --n-slots 4 --max-len 256
 """
 from __future__ import annotations
 
@@ -21,7 +29,8 @@ import jax.numpy as jnp
 from repro.configs import get_config
 from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.models.api import build_model, needs_source
-from repro.serving import ServingEngine
+from repro.serving import (ContinuousBatchingEngine, ServingEngine,
+                           load_trace, poisson_trace)
 
 log = logging.getLogger("repro.launch.serve")
 
@@ -39,6 +48,22 @@ def main(argv=None):
                     choices=["blockwise", "tokenwise", "kernel", "naive"])
     ap.add_argument("--production-mesh", action="store_true")
     ap.add_argument("--metrics-out")
+    # --- continuous batching ---
+    ap.add_argument("--continuous", action="store_true",
+                    help="ragged continuous batching over a request trace")
+    ap.add_argument("--n-slots", type=int, default=0,
+                    help="KV slot pool size (default: --batch)")
+    ap.add_argument("--requests", type=int, default=16,
+                    help="continuous: trace length")
+    ap.add_argument("--chunk", type=int, default=16,
+                    help="continuous: prefill chunk size")
+    ap.add_argument("--rate", type=float, default=None,
+                    help="continuous: Poisson arrival rate req/s "
+                         "(default: backlogged)")
+    ap.add_argument("--trace", default=None,
+                    help="continuous: JSON trace file instead of Poisson")
+    ap.add_argument("--eos-id", type=int, default=None)
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     logging.basicConfig(level=logging.INFO)
@@ -49,10 +74,17 @@ def main(argv=None):
     mesh = (make_production_mesh() if args.production_mesh
             else make_host_mesh())
 
-    need = args.prompt_len + args.gen
-    max_len = args.max_len or (1 << (need - 1).bit_length())
     rng = jax.random.PRNGKey(0)
     params = model.init_params(rng)
+
+    if args.continuous:
+        return _run_continuous(args, cfg, model, params, mesh)
+    return _run_lockstep(args, cfg, model, params, mesh)
+
+
+def _run_lockstep(args, cfg, model, params, mesh):
+    need = args.prompt_len + args.gen
+    max_len = args.max_len or (1 << (need - 1).bit_length())
     src = None
     if needs_source(cfg):
         src = jax.random.normal(
@@ -85,6 +117,37 @@ def main(argv=None):
     if args.metrics_out:
         Path(args.metrics_out).write_text(json.dumps(metrics, indent=1))
     return out, metrics
+
+
+def _run_continuous(args, cfg, model, params, mesh):
+    n_slots = args.n_slots or args.batch
+    max_len = args.max_len or 256
+    if args.trace:
+        trace = load_trace(args.trace, cfg.vocab_size)
+    else:
+        trace = poisson_trace(
+            n_requests=args.requests, vocab_size=cfg.vocab_size,
+            rate=args.rate, prompt_len=(min(8, args.prompt_len),
+                                        args.prompt_len),
+            max_new=(min(4, args.gen), args.gen), seed=args.seed)
+
+    with mesh:
+        eng = ContinuousBatchingEngine(
+            model, params, n_slots=n_slots, max_len=max_len,
+            chunk=args.chunk, eos_id=args.eos_id,
+            temperature=args.temperature, seed=args.seed)
+        eng.warmup()
+        report = eng.run(trace)
+
+    metrics = {"arch": args.arch, "mode": "continuous", "n_slots": n_slots,
+               "max_len": max_len, "chunk": args.chunk,
+               **report["aggregate"]}
+    log.info("%s", metrics)
+    print(json.dumps(metrics))
+    if args.metrics_out:
+        Path(args.metrics_out).write_text(json.dumps(
+            {"metrics": metrics, "requests": report["requests"]}, indent=1))
+    return report, metrics
 
 
 if __name__ == "__main__":

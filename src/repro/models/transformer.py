@@ -180,17 +180,37 @@ class TransformerLM:
             k = rms_norm(k, p["kn"], cfg.norm_eps)
         return q, k, v
 
-    def _self_attn_full(self, p: Params, x: jax.Array,
-                        positions: jax.Array) -> jax.Array:
-        """Full-sequence self attention (training / encoder)."""
+    def _qkv_rope(self, p: Params, x: jax.Array, positions: jax.Array):
+        """Projection + qk-norm + direct RoPE for a [B, S, d] sequence —
+        shared by full-sequence attention and chunked slot prefill (keys
+        leave here post-RoPE, paper §IV-C)."""
         cfg = self.cfg
-        b, s, _ = x.shape
         q, k, v = self._qkv(p, x)
         if cfg.rotary_dim:
             rot = functools.partial(rope_lib.apply_rope, base=cfg.rope_base,
                                     rotary_dim=cfg.rotary_dim)
             q = jnp.swapaxes(rot(jnp.swapaxes(q, 1, 2), positions), 1, 2)
             k = jnp.swapaxes(rot(jnp.swapaxes(k, 1, 2), positions), 1, 2)
+        return q, k, v
+
+    def _ffn_out(self, bp: Params, x: jax.Array) -> tuple[jax.Array, jax.Array]:
+        """ln2 + (MoE | MLP) block tail, shared by the training block, the
+        prefill step, and chunked slot prefill. Returns (y, moe aux)."""
+        cfg = self.cfg
+        h2 = rms_norm(x, bp["ln2"], cfg.norm_eps)
+        if cfg.n_experts:
+            return moe_lib.moe_apply(bp["ffn"], h2, top_k=cfg.top_k,
+                                     act=cfg.act, gated=cfg.gated_mlp,
+                                     capacity_factor=cfg.capacity_factor)
+        return (mlp_apply(bp["ffn"], h2, cfg.act, cfg.gated_mlp),
+                jnp.zeros((), jnp.float32))
+
+    def _self_attn_full(self, p: Params, x: jax.Array,
+                        positions: jax.Array) -> jax.Array:
+        """Full-sequence self attention (training / encoder)."""
+        cfg = self.cfg
+        b, s, _ = x.shape
+        q, k, v = self._qkv_rope(p, x, positions)
         out = attn_lib.prefill_attention(q, k, v, causal=self.causal,
                                          window=cfg.window,
                                          kv_block=cfg.attn_block or 512)
@@ -252,14 +272,7 @@ class TransformerLM:
         if "cross" in p and source is not None:   # whisper-style in-layer cross
             x = x + self._cross_attn_full(
                 p["cross"], rms_norm(x, p["ln_cross"], cfg.norm_eps), source)
-        h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
-        aux = jnp.zeros((), jnp.float32)
-        if cfg.n_experts:
-            y, aux = moe_lib.moe_apply(p["ffn"], h2, top_k=cfg.top_k,
-                                       act=cfg.act, gated=cfg.gated_mlp,
-                                       capacity_factor=cfg.capacity_factor)
-        else:
-            y = mlp_apply(p["ffn"], h2, cfg.act, cfg.gated_mlp)
+        y, aux = self._ffn_out(p, x)
         return self._seq_shard(x + y), aux
 
     def _cross_block(self, p: Params, x: jax.Array,
@@ -453,7 +466,8 @@ class TransformerLM:
         return kc, vc
 
     def _decode_self_attn(self, p: Params, h: jax.Array, kc, vc,
-                          cache: Cache) -> tuple[jax.Array, jax.Array, jax.Array]:
+                          cache: Cache, active: jax.Array | None = None
+                          ) -> tuple[jax.Array, jax.Array, jax.Array]:
         cfg = self.cfg
         b, d = h.shape
         dh = cfg.resolved_head_dim
@@ -464,13 +478,22 @@ class TransformerLM:
             q = rms_norm(q, p["qn"], cfg.norm_eps)
             k = rms_norm(k, p["kn"], cfg.norm_eps)
         q, k = self._rope_qk_decode(cache, q, k, cache["len"])
+        if active is None:
+            write_at, attn_len = cache["len"], cache["len"] + 1
+        else:
+            # ragged batch: inactive rows (free / mid-prefill slots) park
+            # their discarded KV write on the reserved tail row and attend a
+            # 1-token stub — the batch keeps its static shape while slot
+            # membership changes (serving/slot_pool.py reserves the tail)
+            write_at = jnp.where(active, cache["len"], kc.shape[1] - 1)
+            attn_len = jnp.where(active, cache["len"] + 1, 1)
         kc, vc = self._write_kv(kc, vc, k.astype(kc.dtype), v.astype(vc.dtype),
-                                cache["len"])
+                                write_at)
         if cfg.kv_ring and cfg.window:
-            out = attn_lib.decode_attention_ring(q, kc, vc, cache["len"] + 1,
+            out = attn_lib.decode_attention_ring(q, kc, vc, attn_len,
                                                  window=cfg.window)
         else:
-            out = attn_lib.decode_attention(q, kc, vc, cache["len"] + 1,
+            out = attn_lib.decode_attention(q, kc, vc, attn_len,
                                             impl=cfg.decode_impl,
                                             window=cfg.window,
                                             block_size=cfg.attn_block or 512)
@@ -492,14 +515,15 @@ class TransformerLM:
         return jnp.tanh(p["gate"]).astype(h.dtype) * out
 
     def _decode_block(self, bp: Params, slices: dict, x: jax.Array,
-                      cache: Cache) -> tuple[jax.Array, dict]:
+                      cache: Cache, active: jax.Array | None = None
+                      ) -> tuple[jax.Array, dict]:
         """One self block at decode time. ``slices`` holds this layer's cache
         tensors; returns updated slices as scan ys."""
         cfg = self.cfg
         new = {}
         h = rms_norm(x, bp["ln1"], cfg.norm_eps)
         attn_out, new["k"], new["v"] = self._decode_self_attn(
-            bp["attn"], h, slices["k"], slices["v"], cache)
+            bp["attn"], h, slices["k"], slices["v"], cache, active)
         if cfg.family == "hybrid":
             st = mamba_lib.MambaState(conv=slices["mamba_conv"],
                                       ssm=slices["mamba_ssm"])
@@ -526,9 +550,26 @@ class TransformerLM:
         return x + y, new
 
     def decode_step(self, params: Params, tokens: jax.Array,
-                    cache: Cache) -> tuple[jax.Array, Cache]:
-        """tokens: [B] int32 -> (logits [B, V] f32, updated cache)."""
+                    cache: Cache, active: jax.Array | None = None
+                    ) -> tuple[jax.Array, Cache]:
+        """tokens: [B] int32 -> (logits [B, V] f32, updated cache).
+
+        ``active``: optional [B] bool — the ragged continuous-batching form.
+        Active rows decode normally; inactive rows (free or mid-prefill
+        slots) ride through with a parked KV write, a stub attention length,
+        and *no* ``len`` advance, so the jit'd step keeps a static [B] shape
+        while slot membership changes between steps. The per-row
+        incremental-RoPE state still advances for every row; a slot's state
+        is reseeded by ``finalize_slot`` when a new request fills it."""
         cfg = self.cfg
+        if active is not None and cfg.family in ("ssm", "hybrid"):
+            raise NotImplementedError(
+                "ragged decode: recurrent-state families would need masked "
+                "state updates")
+        if active is not None and cfg.kv_ring and cfg.window:
+            raise NotImplementedError(
+                "ragged decode: a ring cache has no reserved tail row — the "
+                "parked write would land on a live in-window ring slot")
         x = params["embed"].astype(self._dt)[tokens]             # [B, d]
 
         if cfg.family == "ssm":
@@ -538,7 +579,7 @@ class TransformerLM:
 
         def step(x, xs):
             bp, slices = xs
-            x, new = self._decode_block(bp, slices, x, cache)
+            x, new = self._decode_block(bp, slices, x, cache, active)
             return x, new
 
         self_slices = {"k": cache["k"], "v": cache["v"]}
@@ -582,7 +623,8 @@ class TransformerLM:
         for key in ("k", "v", "mamba_conv", "mamba_ssm"):
             if key in new:
                 cache[key] = new[key]
-        cache["len"] = cache["len"] + 1
+        cache["len"] = cache["len"] + (1 if active is None
+                                       else active.astype(jnp.int32))
         cache = self._advance_rope(cache)
         x = rms_norm(x, params["ln_f"], cfg.norm_eps)
         return self._unembed(params, x), cache
@@ -672,13 +714,7 @@ class TransformerLM:
                     kv_block=cfg.attn_block or 512)
                 c_out = linear(bp["cross"], "wo", c_out.reshape(b, sp, -1))
                 x = x + jnp.tanh(bp["cross"]["gate"]).astype(h.dtype) * c_out
-            h2 = rms_norm(x, bp["ln2"], cfg.norm_eps)
-            if cfg.n_experts:
-                y, _ = moe_lib.moe_apply(bp["ffn"], h2, top_k=cfg.top_k,
-                                         act=cfg.act, gated=cfg.gated_mlp,
-                                         capacity_factor=cfg.capacity_factor)
-            else:
-                y = mlp_apply(bp["ffn"], h2, cfg.act, cfg.gated_mlp)
+            y, _ = self._ffn_out(bp, x)
             return x + y, new
 
         self_slices = {"k": cache["k"], "v": cache["v"]}
@@ -738,6 +774,106 @@ class TransformerLM:
             cache["rope_sin"] = jnp.broadcast_to(rs.sin_m, cache["rope_sin"].shape)
         x = rms_norm(x[:, -1, :], params["ln_f"], cfg.norm_eps)
         return self._unembed(params, x), cache
+
+    # ---- slot-targeted ragged prefill (continuous batching) ----------------
+    def supports_ragged_serving(self) -> bool:
+        """Chunked slot prefill + masked ragged decode cover the dense
+        self-attention KV families; recurrent-state and cross-attention
+        stacks would need sequential per-slot state threading, and MoE
+        capacity-factor dispatch couples rows across the batch (token drop
+        depends on batch composition), which would break the per-request
+        greedy-equivalence guarantee."""
+        cfg = self.cfg
+        return (cfg.family not in ("ssm", "hybrid", "audio")
+                and not cfg.cross_attn_every
+                and not cfg.n_experts
+                and not (cfg.kv_ring and cfg.window))
+
+    def prefill_chunk(self, params: Params, tokens: jax.Array, cache: Cache,
+                      slot: jax.Array, offset: jax.Array, last: jax.Array
+                      ) -> tuple[jax.Array, Cache]:
+        """Prefill one prompt chunk into a single cache slot at its own
+        offset: tokens [C] run at absolute positions [offset, offset+C),
+        K/V land in rows ``cache[k|v][:, slot, offset:offset+C]``, and the
+        chunk attends causally to the slot's already-written prefix via
+        ``prefill_attention``'s ``kv_lengths`` / ``q_offset`` raggedness.
+
+        Chunking long prompts keeps each call small so in-flight decodes
+        interleave instead of stalling behind a monolithic prefill. The
+        caller pads the final chunk: padded positions write dead KV past the
+        committed length (never attended — decode overwrites them).
+        ``cache['len']`` is untouched until ``finalize_slot`` commits the
+        full prompt length, so concurrent decode steps treat the slot as
+        inactive throughout.
+
+        Only chunk position ``last`` is unembedded (the caller needs one
+        row of logits, on the final chunk — anything else would burn a
+        [C, V] projection per chunk). Returns (logits [V] f32, cache)."""
+        cfg = self.cfg
+        if not self.supports_ragged_serving():
+            raise NotImplementedError(
+                f"prefill_chunk: unsupported config {cfg.name} "
+                "(recurrent state / cross-attention / ring KV)")
+        (c,) = tokens.shape
+        dh = cfg.resolved_head_dim
+        smax, hkv = cache["k"].shape[2], cfg.n_kv_heads
+        x = params["embed"].astype(self._dt)[tokens][None]       # [1, C, d]
+        positions = offset + jnp.arange(c)
+        kv_len = jnp.reshape(offset + c, (1,)).astype(jnp.int32)
+        q_off = jnp.reshape(offset, (1,)).astype(jnp.int32)
+
+        def step(x, xs):
+            bp, slices = xs
+            ap = bp["attn"]
+            h = rms_norm(x, bp["ln1"], cfg.norm_eps)
+            q, k, v = self._qkv_rope(ap, h, positions)
+            kc = jax.lax.dynamic_update_slice(
+                slices["k"], k.astype(slices["k"].dtype), (slot, offset, 0, 0))
+            vc = jax.lax.dynamic_update_slice(
+                slices["v"], v.astype(slices["v"].dtype), (slot, offset, 0, 0))
+            k_slot = jax.lax.dynamic_slice(kc, (slot, 0, 0, 0),
+                                           (1, smax, hkv, dh))
+            v_slot = jax.lax.dynamic_slice(vc, (slot, 0, 0, 0),
+                                           (1, smax, hkv, dh))
+            attn = attn_lib.prefill_attention(
+                q, k_slot, v_slot, causal=True, window=cfg.window,
+                kv_lengths=kv_len, q_offset=q_off,
+                kv_block=cfg.attn_block or 512)
+            x = x + linear(ap, "wo", attn.reshape(1, c, -1))
+            y, _ = self._ffn_out(bp, x)
+            return x + y, {"k": kc, "v": vc}
+
+        x, new = layer_scan(step, x, (params["blocks"],
+                                      {"k": cache["k"], "v": cache["v"]}),
+                            unroll=cfg.unroll_layers)
+        cache = dict(cache, k=new["k"], v=new["v"])
+        x_last = jax.lax.dynamic_slice(x, (0, last, 0),
+                                       (1, 1, cfg.d_model))[:, 0]
+        x_last = rms_norm(x_last, params["ln_f"], cfg.norm_eps)
+        return self._unembed(params, x_last)[0], cache
+
+    def finalize_slot(self, cache: Cache, slot: jax.Array,
+                      length: jax.Array) -> Cache:
+        """Commit a slot's chunked prefill: set its live length and reseed
+        its incremental-RoPE angle state at position ``length`` (direct mode
+        recomputes from ``len`` and needs no per-slot state). Everything in
+        the slot past ``length`` is dead until decode overwrites it."""
+        cfg = self.cfg
+        length = jnp.asarray(length, jnp.int32)
+        cache = dict(cache, len=cache["len"].at[slot].set(length))
+        if cfg.rotary_dim and cfg.rope_mode == "incremental":
+            rs = rope_lib.rope_state_init(cfg.resolved_head_dim,
+                                          cfg.rope_base, length,
+                                          cfg.rotary_dim)
+            cache["rope_cos"] = cache["rope_cos"].at[slot].set(rs.cos_m)
+            cache["rope_sin"] = cache["rope_sin"].at[slot].set(rs.sin_m)
+        return cache
+
+    def release_slot(self, cache: Cache, slot: jax.Array) -> Cache:
+        """Reset-on-release: drop the slot's length to zero so nothing in
+        its KV rows is attended again; the next occupant's prefill
+        overwrites the contents in place."""
+        return dict(cache, len=cache["len"].at[slot].set(0))
 
     def _rwkv_prefill(self, params: Params, x: jax.Array,
                       cache: Cache) -> tuple[jax.Array, Cache]:

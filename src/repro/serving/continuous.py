@@ -1,0 +1,236 @@
+"""Continuous-batching serving engine: slot pool -> scheduler -> ragged
+chunked prefill -> static-shape ragged decode.
+
+The jit'd decode step always runs at ``[n_slots]`` batch shape; an ``active``
+mask carries which slots hold live requests. Each engine step:
+
+1. **admit** — backfill free slots from the admission queue;
+2. **prefill** — every mid-prefill slot advances by one prompt chunk
+   (``TransformerLM.prefill_chunk``), so long prompts never stall in-flight
+   decodes for more than one chunk's latency; a request whose final chunk
+   lands is committed (``finalize_slot``), its first token sampled from the
+   chunk logits, and its slot joins the active set;
+3. **decode** — one ragged ``decode_step`` over all slots; per-slot EOS /
+   max-token retirement releases slots mid-flight (reset-on-release), which
+   the next step's admission immediately backfills.
+
+Greedy outputs are token-for-token identical to per-request
+``ServingEngine.generate`` (tested in tests/test_serving_continuous.py):
+chunked prefill reuses the same blockwise ``prefill_attention`` math, and
+masked-out cache rows are exact no-ops in the (mu, Z, Y) recurrence.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .scheduler import Request, RequestState, Scheduler
+from .slot_pool import KVSlotPool
+
+
+class ContinuousBatchingEngine:
+    def __init__(self, model, params, *, n_slots: int, max_len: int,
+                 chunk: int = 16, eos_id: int | None = None,
+                 pad_id: int = 0, temperature: float = 0.0, seed: int = 0):
+        if not getattr(model, "supports_ragged_serving", lambda: False)():
+            raise ValueError(
+                f"{model.cfg.name}: continuous batching needs a dense "
+                "self-attention KV family (no recurrent state, "
+                "cross-attention, MoE capacity-factor dispatch, or "
+                "ring cache)")
+        if chunk < 1 or max_len % chunk:
+            raise ValueError(f"chunk ({chunk}) must divide max_len "
+                             f"({max_len}) so padded chunks stay in range")
+        self.model, self.params = model, params
+        self.chunk, self.eos_id, self.pad_id = chunk, eos_id, pad_id
+        self.temperature = temperature
+        self._t0 = time.perf_counter()          # reset by run()
+        self._seed = seed
+        self._rng = np.random.default_rng(seed)
+        self.pool = KVSlotPool(n_slots, max_len)
+        self.sched = Scheduler(self.pool)
+        self._prefill_chunk = jax.jit(model.prefill_chunk,
+                                      donate_argnums=(2,))
+        self._finalize = jax.jit(model.finalize_slot, donate_argnums=(0,))
+        self._release = jax.jit(model.release_slot, donate_argnums=(0,))
+        self._decode = jax.jit(model.decode_step, donate_argnums=(2,))
+
+        def _decode_greedy(params, tok, cache, active):
+            # greedy path: argmax fused into the decode program — one
+            # dispatch per step, and only [n_slots] int32 leaves the device
+            # instead of the [n_slots, V] logits
+            logits, cache = model.decode_step(params, tok, cache, active)
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+        self._decode_greedy = jax.jit(_decode_greedy, donate_argnums=(2,))
+        self.cache = model.init_cache(n_slots, max_len)
+        self.tok = np.full((n_slots,), pad_id, np.int32)
+        self.active = np.zeros((n_slots,), bool)
+        # counters for occupancy / utilization reporting
+        self.decode_steps = 0
+        self.prefill_chunks = 0
+        self.active_row_steps = 0
+
+    # ---- intake -----------------------------------------------------------
+    def submit(self, request: Request, now: float = 0.0) -> RequestState:
+        return self.sched.submit(request, now)
+
+    def warmup(self) -> "ContinuousBatchingEngine":
+        """Compile the chunk / finalize / decode / release programs with a
+        throwaway multi-chunk request. ``run`` drops finished-traffic stats
+        at entry, so only the sampler RNG needs rewinding here for reports
+        and sampling to cover real traffic only."""
+        p = max(1, min(self.chunk + 1, self.pool.capacity - 2))
+        self.run([Request(prompt=np.zeros(p, np.int32), max_new_tokens=2,
+                          rid="__warmup__")])
+        self._rng = np.random.default_rng(self._seed)   # un-burn the sampler
+        return self
+
+    # ---- sampling ---------------------------------------------------------
+    def _sample(self, logits_row: np.ndarray) -> int:
+        if self.temperature == 0.0:
+            return int(np.argmax(logits_row))
+        z = logits_row.astype(np.float64) / self.temperature
+        z -= z.max()
+        p = np.exp(z)
+        return int(self._rng.choice(p.size, p=p / p.sum()))
+
+    # ---- one engine step --------------------------------------------------
+    def step(self, now: float | None = None) -> bool:
+        """Admit + advance every prefilling slot one chunk + one ragged
+        decode step. Returns False when nothing was left to do."""
+        now = (time.perf_counter() - self._t0) if now is None else now
+        self.sched.admit(now)
+
+        for state in list(self.sched.prefilling):
+            self._advance_prefill(state)
+
+        if not self.active.any():
+            return self.sched.pending()
+
+        tok, act = jnp.asarray(self.tok), jnp.asarray(self.active)
+        if self.temperature == 0.0:
+            picks, self.cache = self._decode_greedy(self.params, tok,
+                                                    self.cache, act)
+            rows = np.asarray(picks)
+            pick = lambda slot: int(rows[slot])
+        else:
+            logits, self.cache = self._decode(self.params, tok,
+                                              self.cache, act)
+            rows = np.asarray(logits)
+            pick = lambda slot: self._sample(rows[slot])
+        self.decode_steps += 1
+        self.active_row_steps += int(self.active.sum())
+        for slot in np.flatnonzero(self.active):
+            state = self.sched.decoding[int(slot)]
+            self.pool.advance(int(slot))
+            self._emit(state, pick(slot))
+        return True
+
+    def _advance_prefill(self, state: RequestState) -> None:
+        prompt = state.request.prompt
+        off = state.prefilled
+        toks = prompt[off:off + self.chunk]
+        if toks.size < self.chunk:
+            toks = np.pad(toks, (0, self.chunk - toks.size),
+                          constant_values=self.pad_id)
+        last = min(self.chunk - 1, max(0, len(prompt) - 1 - off))
+        logits, self.cache = self._prefill_chunk(
+            self.params, jnp.asarray(toks), self.cache,
+            jnp.int32(state.slot), jnp.int32(off), jnp.int32(last))
+        self.prefill_chunks += 1
+        state.prefilled = min(off + self.chunk, len(prompt))
+        if state.prefilled < len(prompt):
+            return    # non-final chunk: logits row never fetched from device
+        # final chunk: commit the slot, sample the first token
+        self.cache = self._finalize(self.cache, jnp.int32(state.slot),
+                                    len(prompt))
+        self.sched.start_decoding(state)
+        self._emit(state, self._sample(np.asarray(logits)))
+
+    def _emit(self, state: RequestState, token: int) -> None:
+        # stamped here, after np.asarray blocked on the device work that
+        # produced the token — a step-entry clock would understate TTFT/ITL
+        # by up to one whole engine step
+        now = time.perf_counter() - self._t0
+        state.tokens.append(token)
+        state.token_times.append(now)
+        if state.t_first is None:
+            state.t_first = now
+        done = (self.eos_id is not None and token == self.eos_id)
+        if done or len(state.tokens) >= state.request.max_new_tokens:
+            reason = "eos" if done else "max_tokens"
+            slot = self.sched.retire(state, reason, now)
+            self.cache = self._release(self.cache, jnp.int32(slot))
+            self.active[slot] = False
+            self.tok[slot] = self.pad_id
+        else:
+            self.active[state.slot] = True
+            self.tok[state.slot] = token
+
+    # ---- drive a whole trace ----------------------------------------------
+    def run(self, requests: list[Request] | None = None) -> dict:
+        """Drive until every request retires. Each request is submitted once
+        the wall clock passes its ``Request.arrival`` offset (0.0 on every
+        request = a fully backlogged throughput run); when the engine is
+        idle it sleeps until the next arrival, so TTFT measures from the
+        request's actual submission."""
+        # per-run stats: an engine is reusable (warmup, successive traces),
+        # so drop finished-traffic history before timing starts
+        self.sched.reset_stats()
+        self.pool.reset_stats()
+        self.decode_steps = self.prefill_chunks = self.active_row_steps = 0
+        waiting = sorted(requests or [], key=lambda r: r.arrival)
+        self._t0 = t0 = time.perf_counter()
+        while True:
+            now = time.perf_counter() - t0
+            while waiting and waiting[0].arrival <= now:
+                self.submit(waiting.pop(0), now=now)
+            worked = self.step(now)
+            if not worked and not waiting:
+                break
+            if not worked and waiting:
+                time.sleep(max(0.0, waiting[0].arrival
+                               - (time.perf_counter() - t0)))
+        wall = time.perf_counter() - t0
+        self.sched.assert_conservation()
+        return self.report(wall)
+
+    def report(self, wall_s: float) -> dict:
+        done = self.sched.retired
+        gen = sum(len(s.tokens) for s in done)
+        ttfts = sorted(s.ttft for s in done if s.ttft is not None)
+        itls = sorted(x for s in done for x in s.itl_ms)
+
+        def pct(xs, q):
+            return round(float(xs[min(len(xs) - 1,
+                                      int(q * len(xs)))]), 4) if xs else None
+
+        return {
+            "requests": [{
+                "rid": s.rid, "prompt_len": int(len(s.request.prompt)),
+                "n_tokens": len(s.tokens), "tokens": list(s.tokens),
+                "ttft_s": None if s.ttft is None else round(s.ttft, 4),
+                "finish_reason": s.finish_reason,
+            } for s in done + self.sched.rejected],
+            "aggregate": {
+                "n_requests": self.sched.n_submitted,
+                "n_retired": self.sched.n_retired,
+                "n_rejected": len(self.sched.rejected),
+                "generated_tokens": gen,
+                "wall_s": round(wall_s, 3),
+                "tokens_per_s": round(gen / wall_s, 1) if wall_s else None,
+                "decode_steps": self.decode_steps,
+                "prefill_chunks": self.prefill_chunks,
+                "mean_occupancy": round(
+                    self.active_row_steps
+                    / (self.decode_steps * self.pool.n_slots), 3)
+                    if self.decode_steps else 0.0,
+                "ttft_p50_s": pct(ttfts, 0.50),
+                "ttft_p95_s": pct(ttfts, 0.95),
+                "itl_p50_ms": pct(itls, 0.50),
+                "itl_p95_ms": pct(itls, 0.95),
+            },
+        }

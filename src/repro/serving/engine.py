@@ -28,9 +28,18 @@ class ServingEngine:
 
     def generate(self, prompts: jax.Array, *, steps: int,
                  temperature: float = 0.0, rng=None,
-                 eos_id: int | None = None,
+                 eos_id: int | None = None, pad_id: int = 0,
                  source: jax.Array | None = None) -> jax.Array:
-        """prompts: [B, P] int32 (uniform length). Returns [B, steps]."""
+        """prompts: [B, P] int32 (uniform length). Returns [B, steps].
+
+        A row that emits ``eos_id`` is retired: the EOS token itself is
+        emitted, every later step emits ``pad_id``, and the row's decode
+        output is frozen (the lock-step batch keeps its static shape, so
+        retired rows still ride through the decode step — their slots are
+        *reclaimable*, which is what the continuous-batching engine
+        (``repro.serving.continuous``) exploits by backfilling them from its
+        admission queue). Pick a ``pad_id`` outside the live vocab when the
+        output is parsed downstream."""
         b, p = prompts.shape
         assert b == self.batch and p + steps <= self.max_len
         rng = jax.random.PRNGKey(0) if rng is None else rng
@@ -40,7 +49,7 @@ class ServingEngine:
         active = jnp.ones((b,), bool)
         tok = self._sample(logits, temperature, rng)
         for t in range(steps):
-            outs.append(tok)
+            outs.append(jnp.where(active, tok, pad_id))
             if eos_id is not None:
                 active &= tok != eos_id
             rng, sub = jax.random.split(rng)

@@ -1,0 +1,194 @@
+"""Continuous-batching request scheduler.
+
+Lifecycle of a request::
+
+    submit -> QUEUED -> (slot alloc) PREFILLING -> DECODING -> RETIRED
+                 \\-> REJECTED (prompt + budget exceed slot capacity)
+
+The scheduler owns the host-side bookkeeping only: the FIFO admission queue,
+slot assignment from the :class:`KVSlotPool`, per-request token ledgers and
+timing, and retirement (EOS / max-token) with prompt backfill — a freed slot
+is handed to the next queued request at the following engine step's
+admission, so it never idles while work is waiting. All device work (chunked
+prefill, ragged decode, cache resets) lives in
+:mod:`repro.serving.continuous`.
+
+Conservation invariant (checked by ``assert_conservation``): every submitted
+request is in exactly one of queued / prefilling / decoding / retired /
+rejected, every admitted request retires exactly once, and no slot leaks.
+"""
+from __future__ import annotations
+
+import itertools
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Iterable
+
+import numpy as np
+
+from .slot_pool import KVSlotPool
+
+QUEUED, PREFILLING, DECODING, RETIRED, REJECTED = (
+    "queued", "prefilling", "decoding", "retired", "rejected")
+
+
+@dataclass(eq=False)               # identity equality: prompts are arrays
+class Request:
+    """One generation request. ``arrival`` is seconds on the engine clock
+    (0.0 = already waiting when the engine starts)."""
+    prompt: np.ndarray                 # [P] int32 token ids
+    max_new_tokens: int
+    rid: int | str | None = None
+    arrival: float = 0.0
+
+    def __post_init__(self):
+        self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
+        if self.prompt.size == 0:
+            raise ValueError("empty prompt")
+        if self.max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+
+    @property
+    def budget(self) -> int:
+        """Cache rows the request may touch: prompt + every generated token
+        except the last (which is emitted without ever being fed back, so
+        it gets no KV write)."""
+        return len(self.prompt) + self.max_new_tokens - 1
+
+
+@dataclass(eq=False)               # identity equality: used in remove()
+class RequestState:
+    request: Request
+    status: str = QUEUED
+    slot: int | None = None
+    prefilled: int = 0                 # prompt tokens already chunk-prefilled
+    tokens: list = field(default_factory=list)
+    token_times: list = field(default_factory=list)
+    t_submit: float = 0.0
+    t_admit: float | None = None
+    t_first: float | None = None
+    t_done: float | None = None
+    finish_reason: str = ""
+
+    @property
+    def rid(self):
+        return self.request.rid
+
+    @property
+    def ttft(self) -> float | None:
+        """Submit -> first emitted token (includes queueing delay)."""
+        return None if self.t_first is None else self.t_first - self.t_submit
+
+    @property
+    def itl_ms(self) -> list:
+        ts = self.token_times
+        return [1e3 * (b - a) for a, b in zip(ts, ts[1:])]
+
+
+class Scheduler:
+    def __init__(self, pool: KVSlotPool):
+        self.pool = pool
+        self.queue: deque[RequestState] = deque()
+        self.prefilling: list[RequestState] = []
+        self.decoding: dict[int, RequestState] = {}      # slot -> state
+        self.retired: list[RequestState] = []
+        self.rejected: list[RequestState] = []
+        self._auto_rid = itertools.count()
+        self._rids: set = set()
+        self.n_submitted = 0
+        self.n_admitted = 0
+        self.n_retired = 0
+
+    # ---- intake -----------------------------------------------------------
+    def submit(self, request: Request, now: float = 0.0) -> RequestState:
+        if request.rid is None:
+            while (rid := f"auto-{next(self._auto_rid)}") in self._rids:
+                pass
+            request.rid = rid
+        if request.rid in self._rids:
+            raise ValueError(f"duplicate request id {request.rid!r}")
+        self._rids.add(request.rid)
+        state = RequestState(request=request, t_submit=now)
+        self.n_submitted += 1
+        if not self.pool.fits(request.budget):
+            state.status = REJECTED
+            state.finish_reason = (f"rejected: needs {request.budget} rows > "
+                                   f"slot capacity {self.pool.capacity}")
+            state.t_done = now
+            self.rejected.append(state)
+            return state
+        self.queue.append(state)
+        return state
+
+    def admit(self, now: float) -> list[RequestState]:
+        """Backfill free slots from the queue (FIFO). Called at the top of
+        every engine step, so a slot freed by a retirement is backfilled at
+        the following step and never idles while work is waiting."""
+        newly = []
+        while self.queue and self.pool.n_free:
+            state = self.queue.popleft()
+            state.slot = self.pool.alloc(state.rid)
+            state.status = PREFILLING
+            state.t_admit = now
+            self.n_admitted += 1
+            self.prefilling.append(state)
+            newly.append(state)
+        return newly
+
+    # ---- transitions ------------------------------------------------------
+    def start_decoding(self, state: RequestState) -> None:
+        assert state.status == PREFILLING and state.slot is not None
+        self.prefilling.remove(state)
+        self.pool.set_length(state.slot, len(state.request.prompt))
+        state.status = DECODING
+        self.decoding[state.slot] = state
+
+    def retire(self, state: RequestState, reason: str, now: float) -> int:
+        """Free the slot and record the outcome; returns the freed slot so
+        the engine can reset the device-side cache entry."""
+        assert state.status == DECODING
+        slot = state.slot
+        self.decoding.pop(slot)
+        self.pool.release(slot)
+        state.status = RETIRED
+        state.finish_reason = reason
+        state.t_done = now
+        state.slot = None
+        self.retired.append(state)
+        self.n_retired += 1
+        return slot
+
+    def reset_stats(self) -> None:
+        """Forget finished-traffic history (retired / rejected records, their
+        rids, and the counters) while keeping live state — queue, prefilling,
+        decoding, slot ownership — intact. Used by engine warmup so reports
+        cover only real traffic."""
+        self.retired.clear()
+        self.rejected.clear()
+        self._rids = {s.rid for s in self.all_states()}
+        self.n_submitted = (len(self.queue) + len(self.prefilling)
+                            + len(self.decoding))
+        self.n_admitted = len(self.prefilling) + len(self.decoding)
+        self.n_retired = 0
+
+    # ---- queries ----------------------------------------------------------
+    def pending(self) -> bool:
+        return bool(self.queue or self.prefilling or self.decoding)
+
+    def all_states(self) -> Iterable[RequestState]:
+        return itertools.chain(self.queue, self.prefilling,
+                               self.decoding.values(), self.retired,
+                               self.rejected)
+
+    def assert_conservation(self) -> None:
+        in_flight = (len(self.queue) + len(self.prefilling)
+                     + len(self.decoding))
+        assert self.n_submitted == (in_flight + len(self.retired)
+                                    + len(self.rejected)), vars(self)
+        assert self.n_admitted == (len(self.prefilling) + len(self.decoding)
+                                   + self.n_retired)
+        assert self.n_retired == len(self.retired)
+        assert self.pool.n_used == len(self.prefilling) + len(self.decoding)
+        rids = [s.rid for s in self.all_states()]
+        assert len(rids) == len(set(rids)), "request tracked twice"
+        self.pool.assert_consistent()

@@ -1,0 +1,54 @@
+"""Load harness: Poisson / trace-driven request generation for the serving
+benchmarks. Produces plain :class:`repro.serving.scheduler.Request` lists so
+the same trace drives both the continuous engine and the lock-step baseline.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import numpy as np
+
+from .scheduler import Request
+
+
+def poisson_trace(*, n_requests: int, vocab_size: int,
+                  rate: float | None = None,
+                  prompt_len: tuple[int, int] = (8, 48),
+                  max_new: tuple[int, int] = (4, 128),
+                  seed: int = 0) -> list[Request]:
+    """Ragged trace: prompt lengths and output budgets drawn uniformly from
+    their ranges (mixed-length — the shape production traffic actually has),
+    arrivals Poisson at ``rate`` req/s (``None``: all backlogged at t=0)."""
+    rng = np.random.default_rng(seed)
+    arrivals = (np.zeros(n_requests) if rate is None
+                else np.cumsum(rng.exponential(1.0 / rate, n_requests)))
+    reqs = []
+    for i in range(n_requests):
+        p = int(rng.integers(prompt_len[0], prompt_len[1], endpoint=True))
+        reqs.append(Request(
+            prompt=rng.integers(0, vocab_size, p).astype(np.int32),
+            max_new_tokens=int(rng.integers(max_new[0], max_new[1],
+                                            endpoint=True)),
+            rid=i, arrival=float(arrivals[i])))
+    return reqs
+
+
+def load_trace(path: str | Path, vocab_size: int) -> list[Request]:
+    """Trace file: JSON list of {"prompt_len" | "prompt", "max_new_tokens",
+    "arrival"?} records. ``prompt_len`` entries get deterministic synthetic
+    token ids (seeded per record) clipped to the vocab."""
+    records = json.loads(Path(path).read_text())
+    reqs = []
+    for i, rec in enumerate(records):
+        if "prompt" in rec:
+            prompt = np.asarray(rec["prompt"], np.int32) % vocab_size
+        else:
+            rng = np.random.default_rng(rec.get("seed", i))
+            prompt = rng.integers(0, vocab_size,
+                                  int(rec["prompt_len"])).astype(np.int32)
+        reqs.append(Request(prompt=prompt,
+                            max_new_tokens=int(rec["max_new_tokens"]),
+                            rid=rec.get("rid", i),
+                            arrival=float(rec.get("arrival", 0.0))))
+    return reqs

@@ -1,0 +1,90 @@
+"""Seeded explicit-case fallback for the optional ``hypothesis`` dependency.
+
+Test modules try the real library first and fall back to this shim, so the
+tier-1 suite *collects and runs* on images that don't ship hypothesis. The
+shim mirrors the tiny decorator surface these tests use (``given`` /
+``settings`` / ``strategies.floats|integers|lists``): each ``@given`` test
+runs over the strategies' boundary values plus a fixed number of seeded
+random draws — deterministic explicit cases, not adaptive search.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+_DEFAULT_EXAMPLES = 20
+_MAX_EXAMPLES_CAP = 30   # explicit cases: keep the suite fast
+
+
+class _Strategy:
+    def __init__(self, draw, boundaries=()):
+        self._draw = draw
+        self.boundaries = list(boundaries)
+
+    def example(self, rng):
+        return self._draw(rng)
+
+
+class _Strategies:
+    @staticmethod
+    def floats(min_value=-1e6, max_value=1e6, allow_nan=False,
+               allow_infinity=False, width=64):
+        lo, hi = float(min_value), float(max_value)
+        bounds = [lo, hi]
+        if lo <= 0.0 <= hi:
+            bounds.append(0.0)
+        return _Strategy(lambda rng: float(rng.uniform(lo, hi)), bounds)
+
+    @staticmethod
+    def integers(min_value, max_value):
+        lo, hi = int(min_value), int(max_value)
+        return _Strategy(lambda rng: int(rng.integers(lo, hi,
+                                                      endpoint=True)),
+                         [lo, hi])
+
+    @staticmethod
+    def lists(elements, min_size=0, max_size=None):
+        hi = min_size + 4 if max_size is None else max_size
+
+        def draw(rng):
+            n = int(rng.integers(min_size, hi, endpoint=True))
+            return [elements.example(rng) for _ in range(n)]
+        return _Strategy(draw)
+
+
+st = _Strategies()
+
+
+def settings(max_examples=_DEFAULT_EXAMPLES, deadline=None, **_kw):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strategies):
+    def deco(fn):
+        def run():
+            n = min(getattr(run, "_max_examples",
+                            getattr(fn, "_max_examples", _DEFAULT_EXAMPLES)),
+                    _MAX_EXAMPLES_CAP)
+            rng = np.random.default_rng(0)
+            cases = []
+            # aligned boundary tuples (all-lo / all-hi / zeros), gaps drawn
+            width = max((len(s.boundaries) for s in strategies), default=0)
+            for i in range(width):
+                cases.append(tuple(
+                    s.boundaries[i] if i < len(s.boundaries)
+                    else s.example(rng) for s in strategies))
+            while len(cases) < n:
+                cases.append(tuple(s.example(rng) for s in strategies))
+            for case in cases[:n]:
+                fn(*case)
+
+        # no functools.wraps: pytest must see the zero-arg signature, not
+        # the wrapped one (it would try to resolve ``x`` as a fixture)
+        run.__name__ = fn.__name__
+        run.__doc__ = fn.__doc__
+        run.__module__ = fn.__module__
+        run._max_examples = getattr(fn, "_max_examples", _DEFAULT_EXAMPLES)
+        return run
+    return deco

@@ -1,0 +1,225 @@
+"""Continuous-batching subsystem: slot-pool invariants, scheduler
+conservation, post-EOS pad emission, and end-to-end greedy equivalence of
+continuous batching vs per-request lock-step generation."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models.api import build_model
+from repro.serving import (ContinuousBatchingEngine, KVSlotPool, Request,
+                           Scheduler, ServingEngine, SlotPoolError,
+                           poisson_trace)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module")
+def dense_model():
+    cfg = get_config("llama2-7b", reduced=True)   # f32, 2-layer dense
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+# ---------------------------------------------------------------------------
+# slot pool
+# ---------------------------------------------------------------------------
+
+def test_slot_pool_alloc_release_reuse():
+    pool = KVSlotPool(3, max_len=64)
+    assert pool.capacity == 63 and pool.n_free == 3
+    a = pool.alloc("r0")
+    b = pool.alloc("r1")
+    c = pool.alloc("r2")
+    assert sorted([a, b, c]) == [0, 1, 2]
+    assert pool.alloc("r3") is None               # exhausted
+    pool.set_length(b, 17)
+    assert pool.length(b) == 17 and pool.occupancy() == 1.0
+    assert pool.release(b) == "r1"
+    assert pool.length(b) == 0                    # reset-on-release
+    assert pool.alloc("r3") == b                  # freed slot reused
+    pool.assert_consistent()
+
+
+def test_slot_pool_misuse_raises():
+    pool = KVSlotPool(2, max_len=32)
+    s = pool.alloc("r0")
+    pool.release(s)
+    with pytest.raises(SlotPoolError):
+        pool.release(s)                           # double release
+    with pytest.raises(SlotPoolError):
+        pool.set_length(s, 4)                     # unowned slot
+    s = pool.alloc("r1")
+    with pytest.raises(SlotPoolError):
+        pool.set_length(s, pool.capacity + 1)     # over capacity
+    assert not pool.fits(pool.capacity + 1) and pool.fits(pool.capacity)
+
+
+def test_slot_pool_reserves_parking_row():
+    # the ragged decode step parks masked writes on the last cache row
+    pool = KVSlotPool(2, max_len=64)
+    assert pool.capacity == 63
+
+
+# ---------------------------------------------------------------------------
+# scheduler
+# ---------------------------------------------------------------------------
+
+def _req(rid, p=4, gen=3):
+    return Request(prompt=np.arange(p, dtype=np.int32),
+                   max_new_tokens=gen, rid=rid)
+
+
+def test_scheduler_conservation_and_backfill():
+    sched = Scheduler(KVSlotPool(2, max_len=64))
+    states = [sched.submit(_req(i)) for i in range(5)]
+    # over-budget request is rejected at submit, not queued
+    rej = sched.submit(Request(prompt=np.zeros(60, np.int32),
+                               max_new_tokens=10, rid="big"))
+    assert rej.status == "rejected" and len(sched.rejected) == 1
+
+    retired = []
+    now = 0.0
+    while sched.pending():
+        sched.admit(now)
+        assert sched.pool.n_used <= 2
+        for st in list(sched.prefilling):
+            st.prefilled = len(st.request.prompt)
+            sched.start_decoding(st)
+        # retire one per tick: freed slot must backfill next tick
+        slot, st = next(iter(sched.decoding.items()))
+        sched.retire(st, "max_tokens", now)
+        retired.append(st.rid)
+        sched.assert_conservation()
+        now += 1.0
+
+    assert sorted(retired) == [0, 1, 2, 3, 4]      # each retires exactly once
+    assert sched.n_admitted == sched.n_retired == 5
+    assert sched.pool.n_free == 2                  # no slot leaks
+    sched.assert_conservation()
+
+
+def test_scheduler_fifo_admission():
+    sched = Scheduler(KVSlotPool(1, max_len=64))
+    for i in range(3):
+        sched.submit(_req(i))
+    order = []
+    while sched.pending():
+        sched.admit(0.0)
+        for st in list(sched.prefilling):
+            st.prefilled = len(st.request.prompt)
+            sched.start_decoding(st)
+            order.append(st.rid)
+        slot, st = next(iter(sched.decoding.items()))
+        sched.retire(st, "max_tokens", 0.0)
+    assert order == [0, 1, 2]
+
+
+# ---------------------------------------------------------------------------
+# lock-step engine: post-EOS pad emission (reclaimable rows)
+# ---------------------------------------------------------------------------
+
+def test_lockstep_post_eos_emits_pad(dense_model):
+    cfg, model, params = dense_model
+    prompts = jax.random.randint(jax.random.PRNGKey(3), (2, 8), 0,
+                                 cfg.vocab_size, jnp.int32)
+    eng = ServingEngine(model, params, max_len=32, batch=2)
+    free = np.asarray(eng.generate(prompts, steps=6))
+    # re-run with eos = row 0's second token: row 0 emits up to (and
+    # including) the EOS, then pads; row 1 is unaffected
+    eos = int(free[0, 1])
+    pad = cfg.vocab_size  # out-of-vocab pad id
+    out = np.asarray(eng.generate(prompts, steps=6, eos_id=eos, pad_id=pad))
+    row = out[0].tolist()
+    stop = row.index(eos)
+    assert row[:stop + 1] == free[0, :stop + 1].tolist()
+    assert all(t == pad for t in row[stop + 1:])
+    if eos not in free[1].tolist():
+        assert out[1].tolist() == free[1].tolist()
+
+
+# ---------------------------------------------------------------------------
+# continuous engine: end-to-end
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["llama2-7b",       # MHA dense
+                                  "qwen3-8b",        # GQA + qk_norm
+                                  "h2o-danube-1.8b"  # GQA + SWA window
+                                  ])
+def test_continuous_matches_per_request_greedy(arch, dense_model):
+    """Every request's continuous-batching output must equal its
+    single-request lock-step generation token-for-token (greedy)."""
+    if arch == "llama2-7b":
+        cfg, model, params = dense_model
+    else:
+        cfg = get_config(arch, reduced=True)
+        model = build_model(cfg)
+        params = model.init_params(jax.random.PRNGKey(0))
+    trace = poisson_trace(n_requests=6, vocab_size=cfg.vocab_size,
+                          prompt_len=(3, 18), max_new=(3, 12), seed=11)
+    eng = ContinuousBatchingEngine(model, params, n_slots=2, max_len=64,
+                                   chunk=8)
+    report = eng.run(list(trace))
+    agg = report["aggregate"]
+    assert agg["n_retired"] == 6 and agg["n_rejected"] == 0
+    assert eng.pool.n_free == 2                   # all slots returned
+    assert eng.pool.total_allocs == eng.pool.total_releases == 6
+
+    ref_eng = ServingEngine(model, params, max_len=64, batch=1)
+    by_rid = {r["rid"]: r for r in report["requests"]}
+    for req in trace:
+        ref = np.asarray(ref_eng.generate(
+            jnp.asarray(req.prompt)[None], steps=req.max_new_tokens))[0]
+        assert by_rid[req.rid]["tokens"] == ref.tolist(), req.rid
+        assert by_rid[req.rid]["finish_reason"] == "max_tokens"
+
+
+def test_continuous_eos_retires_early_and_backfills(dense_model):
+    cfg, model, params = dense_model
+    prompt = np.arange(5, dtype=np.int32)
+    # find what the model greedily emits, then use its 2nd token as EOS
+    probe = ContinuousBatchingEngine(model, params, n_slots=1, max_len=64,
+                                     chunk=8)
+    free = probe.run([Request(prompt=prompt, max_new_tokens=8, rid="probe")])
+    toks = free["requests"][0]["tokens"]
+    eos = toks[1]
+
+    eng = ContinuousBatchingEngine(model, params, n_slots=1, max_len=64,
+                                   chunk=8, eos_id=eos)
+    # a second queued request must backfill the slot freed by the EOS
+    report = eng.run([Request(prompt=prompt, max_new_tokens=8, rid="a"),
+                      Request(prompt=prompt + 1, max_new_tokens=3, rid="b")])
+    by_rid = {r["rid"]: r for r in report["requests"]}
+    assert by_rid["a"]["tokens"] == toks[:2]      # EOS emitted, then retired
+    assert by_rid["a"]["finish_reason"] == "eos"
+    assert by_rid["b"]["n_tokens"] >= 1
+    assert eng.pool.n_free == 1
+
+
+def test_continuous_respects_slot_capacity(dense_model):
+    cfg, model, params = dense_model
+    eng = ContinuousBatchingEngine(model, params, n_slots=2, max_len=32,
+                                   chunk=8)
+    st = eng.submit(Request(prompt=np.zeros(30, np.int32),
+                            max_new_tokens=8, rid="big"))
+    assert st.status == "rejected"                 # 38 rows > capacity 31
+
+
+def test_continuous_gates_unsupported_families():
+    cfg = get_config("rwkv6-3b", reduced=True)     # ssm family
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError):
+        ContinuousBatchingEngine(model, params, n_slots=2, max_len=32,
+                                 chunk=8)
+
+
+def test_continuous_chunk_must_divide_max_len(dense_model):
+    cfg, model, params = dense_model
+    with pytest.raises(ValueError):
+        ContinuousBatchingEngine(model, params, n_slots=2, max_len=64,
+                                 chunk=7)

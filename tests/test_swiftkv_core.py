@@ -7,7 +7,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:          # optional dep: seeded explicit cases
+    from _hypothesis_compat import given, settings, st
 
 from repro.core import swiftkv
 from repro.core.swiftkv import (SwiftKVState, state_finalize, state_init,
