@@ -14,7 +14,15 @@ Both engines run the same jit'd model; tokens are counted as each request's
 ``max_new_tokens`` (useful tokens only — lock-step's over-generated padding
 rows don't count). Emits a ``BENCH_serving.json`` summary.
 
+``--arch`` takes a comma-separated list (the JSON becomes a list of per-arch
+results), and ``--verify`` re-checks the continuous engine's greedy outputs
+token-for-token against per-request ``ServingEngine.generate`` — the
+per-request-equivalence contract that now also covers the recurrent-state
+(rwkv6-3b, hymba-1.5b) and MoE (olmoe-1b-7b) families.
+
     PYTHONPATH=src python benchmarks/serving_bench.py --reduced
+    PYTHONPATH=src python benchmarks/serving_bench.py --reduced --verify \
+        --arch rwkv6-3b,hymba-1.5b,olmoe-1b-7b
 """
 from __future__ import annotations
 
@@ -70,7 +78,28 @@ def continuous_runner(model, params, trace, *, n_slots, max_len, chunk, seed):
     eng = ContinuousBatchingEngine(model, params, n_slots=n_slots,
                                    max_len=max_len, chunk=chunk, seed=seed)
     eng.warmup()
-    return lambda: eng.run([r for r in trace])["aggregate"]
+    holder = {}
+
+    def one_pass():
+        report = eng.run([r for r in trace])
+        holder["report"] = report      # full per-request report for --verify
+        return report["aggregate"]
+    one_pass.holder = holder
+    return one_pass
+
+
+def verify_equivalence(model, params, trace, report, *, max_len) -> list:
+    """Greedy continuous-batching outputs must equal per-request lock-step
+    generation token-for-token; returns the rids that differ."""
+    ref = ServingEngine(model, params, max_len=max_len, batch=1)
+    by_rid = {r["rid"]: r for r in report["requests"]}
+    bad = []
+    for req in trace:
+        want = np.asarray(ref.generate(jnp.asarray(req.prompt)[None],
+                                       steps=req.max_new_tokens))[0]
+        if by_rid[req.rid]["tokens"] != want.tolist():
+            bad.append(req.rid)
+    return bad
 
 
 def best_of_interleaved(runners: dict, repeats: int) -> dict:
@@ -88,7 +117,8 @@ def best_of_interleaved(runners: dict, repeats: int) -> dict:
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="llama2-7b")
+    ap.add_argument("--arch", default="llama2-7b",
+                    help="architecture name, or a comma-separated list")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--n-slots", type=int, default=4)
     ap.add_argument("--requests", type=int, default=32,
@@ -108,9 +138,27 @@ def main(argv=None) -> int:
     ap.add_argument("--json", default="BENCH_serving.json")
     ap.add_argument("--check", action="store_true",
                     help=f"exit non-zero unless speedup >= {SPEEDUP_TARGET}x")
+    ap.add_argument("--verify", action="store_true",
+                    help="check continuous greedy outputs token-for-token "
+                         "against per-request generation (exit non-zero on "
+                         "any mismatch)")
     args = ap.parse_args(argv)
 
-    cfg = get_config(args.arch, reduced=args.reduced)
+    results, rc = [], 0
+    for arch in args.arch.split(","):
+        result, arch_rc = run_arch(arch.strip(), args)
+        results.append(result)
+        rc = max(rc, arch_rc)
+
+    out = Path(args.json)
+    out.write_text(json.dumps(results[0] if len(results) == 1 else results,
+                              indent=1))
+    print(f"wrote {out}")
+    return rc
+
+
+def run_arch(arch: str, args) -> tuple[dict, int]:
+    cfg = get_config(arch, reduced=args.reduced)
     model = build_model(cfg)
     params = model.init_params(jax.random.PRNGKey(0))
     trace = poisson_trace(
@@ -133,14 +181,15 @@ def main(argv=None) -> int:
 
     print(f"[serving_bench] {cfg.name} reduced={args.reduced} "
           f"slots={args.n_slots} requests={len(trace)}")
+    cont_runner = continuous_runner(model, params, trace,
+                                    n_slots=args.n_slots,
+                                    max_len=args.max_len,
+                                    chunk=args.chunk, seed=args.seed)
     best = best_of_interleaved({
         "lockstep": lockstep_runner(model, params, trace,
                                     n_slots=args.n_slots,
                                     max_len=args.max_len),
-        "continuous": continuous_runner(model, params, trace,
-                                        n_slots=args.n_slots,
-                                        max_len=args.max_len,
-                                        chunk=args.chunk, seed=args.seed),
+        "continuous": cont_runner,
     }, args.repeats)
     lock, cont = best["lockstep"], best["continuous"]
     print(f"  lock-step:  {lock['tokens_per_s']:8.1f} tok/s "
@@ -154,6 +203,7 @@ def main(argv=None) -> int:
     status = "PASS" if speedup >= SPEEDUP_TARGET else "MISS"
     print(f"  speedup: {speedup}x (target {SPEEDUP_TARGET}x) [{status}]")
 
+    rc = 0 if (speedup >= SPEEDUP_TARGET or not args.check) else 1
     result = {
         "bench": "serving_continuous_vs_lockstep",
         "arch": cfg.name, "reduced": args.reduced,
@@ -165,10 +215,16 @@ def main(argv=None) -> int:
         "speedup_tokens_per_s": speedup,
         "speedup_target": SPEEDUP_TARGET,
     }
-    out = Path(args.json)
-    out.write_text(json.dumps(result, indent=1))
-    print(f"wrote {out}")
-    return 0 if (speedup >= SPEEDUP_TARGET or not args.check) else 1
+    if args.verify:
+        bad = verify_equivalence(model, params, trace,
+                                 cont_runner.holder["report"],
+                                 max_len=args.max_len)
+        result["verify_mismatched_rids"] = bad
+        print(f"  verify: {len(trace) - len(bad)}/{len(trace)} requests "
+              f"token-for-token equal to per-request generation "
+              f"[{'PASS' if not bad else 'FAIL: ' + str(bad)}]")
+        rc = max(rc, 1 if bad else 0)
+    return result, rc
 
 
 if __name__ == "__main__":

@@ -1,0 +1,38 @@
+"""Version-compat shim for ``shard_map`` (mirrors kernels/pallas_compat.py).
+
+``shard_map`` moved across jax releases: 0.4.x ships it as
+``jax.experimental.shard_map.shard_map`` with a ``check_rep`` flag; newer
+releases promote it to ``jax.shard_map`` and rename the replication check to
+``check_vma`` (varying-manual-axes). Callers import the resolved wrapper from
+here so the explicit-SPMD paths (expert-parallel MoE dispatch,
+sequence-parallel decode attention) lower on whichever jax the image bakes in.
+
+``pcast`` (marking a value as device-varying for the vma analysis) only
+exists on the newer API; on releases without it the replication check is the
+legacy ``check_rep`` — which our callers disable anyway — so the fallback is
+an identity.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["shard_map", "pcast"]
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` when available, else the ``jax.experimental`` form
+    with ``check_vma`` mapped onto the old ``check_rep`` flag."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma)
+
+
+def pcast(x, axes, *, to: str = "varying"):
+    """``jax.lax.pcast`` when available; identity on releases predating the
+    vma tracking (their ``check_rep`` analysis needs no cast)."""
+    if hasattr(jax.lax, "pcast"):
+        return jax.lax.pcast(x, axes, to=to)
+    return x

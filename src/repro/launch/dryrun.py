@@ -45,6 +45,15 @@ from repro.train import make_train_step  # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
 
+def _cost_dict(cost) -> dict:
+    """Normalize ``cost_analysis()`` across jax releases: 0.4.x returns a
+    one-element list of dicts, newer releases return the dict directly (and
+    either may return None on backends without an analysis)."""
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else None
+    return cost if isinstance(cost, dict) else {}
+
+
 # ---------------------------------------------------------------------------
 # Step builders: one lowered unit per shape kind
 # ---------------------------------------------------------------------------
@@ -162,13 +171,13 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
             t_lower = time.perf_counter() - t0
             # platform-independent pre-partition costs: true-dtype bytes
             # (the CPU backend's bf16->f32 converts inflate compiled bytes)
-            lca = lowered.cost_analysis()
+            lca = _cost_dict(lowered.cost_analysis())
             t0 = time.perf_counter()
             compiled = lowered.compile()
             t_compile = time.perf_counter() - t0
 
         mem = compiled.memory_analysis()
-        cost = compiled.cost_analysis()
+        cost = _cost_dict(compiled.cost_analysis())
         hlo = compiled.as_text()
         if save_hlo:
             Path(save_hlo).write_text(hlo)
@@ -264,9 +273,9 @@ def _extract_costs(cfg, shape, mesh, rules, microbatches=1,
     with mesh:
         lowered = jax.jit(fn, in_shardings=in_sh,
                           out_shardings=out_sh).lower(*args)
-        lca = lowered.cost_analysis()
+        lca = _cost_dict(lowered.cost_analysis())
         compiled = lowered.compile()
-    cost = compiled.cost_analysis()
+    cost = _cost_dict(compiled.cost_analysis())
     stats = roofline.parse_collectives(compiled.as_text(),
                                        default_group=rules.tp_size)
     return {

@@ -9,10 +9,13 @@ Two modes over host devices (reduced configs) or a production mesh:
   subsystem (``repro.serving.continuous``): KV slot pool + request
   scheduler + chunked slot prefill, driven by a Poisson or file trace, with
   per-request TTFT / inter-token latency and slot-occupancy metrics.
+  Covers the dense-KV, recurrent-state (ssm / hybrid: rwkv6-3b,
+  hymba-1.5b), and MoE (olmoe-1b-7b, llama4-scout) families; only
+  cross-attention stacks (vlm / audio) and ring-KV configs stay lock-step.
 
     PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --reduced \
         --batch 4 --prompt-len 32 --gen 64
-    PYTHONPATH=src python -m repro.launch.serve --arch llama2-7b --reduced \
+    PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-3b --reduced \
         --continuous --requests 16 --n-slots 4 --max-len 256
 """
 from __future__ import annotations
@@ -50,7 +53,8 @@ def main(argv=None):
     ap.add_argument("--metrics-out")
     # --- continuous batching ---
     ap.add_argument("--continuous", action="store_true",
-                    help="ragged continuous batching over a request trace")
+                    help="ragged continuous batching over a request trace "
+                         "(dense, ssm, hybrid, and MoE families)")
     ap.add_argument("--n-slots", type=int, default=0,
                     help="KV slot pool size (default: --batch)")
     ap.add_argument("--requests", type=int, default=16,

@@ -55,9 +55,18 @@ def _conv_mix(conv_w, x_window):
 
 
 def mamba_forward(params: dict, x: jax.Array,
-                  return_state: bool = False):
+                  return_state: bool = False,
+                  state: MambaState | None = None,
+                  n_valid: jax.Array | None = None):
     """x: [B, S, d_model] -> [B, S, d_model] (training / prefill path).
-    ``return_state``: also return the MambaState after the last position."""
+    ``return_state``: also return the MambaState after the last position.
+
+    ``state``: continue from an earlier chunk's state instead of zeros — the
+    conv tail replaces the causal zero-padding and the SSM scan seeds from
+    ``state.ssm`` (chunked slot prefill). ``n_valid``: positions >= n_valid
+    are padding and must be exact state no-ops (dt=0 makes the discretized
+    decay da=exp(0)=1 and the input term 0; the returned conv tail is the
+    last K-1 *valid* inputs)."""
     b, s, d = x.shape
     dt_x = x.dtype
     d_inner = params["out_proj"].shape[0]
@@ -65,8 +74,12 @@ def mamba_forward(params: dict, x: jax.Array,
     xz = x @ params["in_proj"].astype(dt_x)
     xi, z = jnp.split(xz, 2, axis=-1)                         # [B, S, d_inner]
 
-    # causal depthwise conv along S
-    xi_pad = jnp.pad(xi, ((0, 0), (k - 1, 0), (0, 0)))
+    # causal depthwise conv along S; a carried state supplies the K-1 inputs
+    # preceding this chunk in place of the zero pad
+    if state is not None and k > 1:
+        xi_pad = jnp.concatenate([state.conv.astype(dt_x), xi], axis=1)
+    else:
+        xi_pad = jnp.pad(xi, ((0, 0), (k - 1, 0), (0, 0)))
     conv = sum(xi_pad[:, i:i + s, :] * params["conv_w"][i].astype(dt_x)
                for i in range(k))
     u = jax.nn.silu(conv)
@@ -75,6 +88,8 @@ def mamba_forward(params: dict, x: jax.Array,
     n = (dbc.shape[-1] - 1) // 2
     dt = jax.nn.softplus(dbc[..., :1].astype(jnp.float32) * params["dt_w"]
                          + params["dt_bias"])
+    if n_valid is not None:
+        dt = dt * (jnp.arange(s) < n_valid)[None, :, None]
     bmat, cmat = dbc[..., 1:1 + n], dbc[..., 1 + n:]
 
     def scan_one(carry, inp):
@@ -84,19 +99,26 @@ def mamba_forward(params: dict, x: jax.Array,
                          c_t.astype(jnp.float32))
         return h, y
 
-    def per_batch(u_b, dt_b, b_b, c_b):
-        h0 = jnp.zeros((d_inner, n), jnp.float32)
+    def per_batch(u_b, dt_b, b_b, c_b, h0):
         h_fin, ys = jax.lax.scan(scan_one, h0, (u_b, dt_b, b_b, c_b))
         return h_fin, ys                                      # [S, d_inner]
 
-    h_fin, ys = jax.vmap(per_batch)(u, dt, bmat, cmat)
+    h0s = (jnp.zeros((b, d_inner, n), jnp.float32) if state is None
+           else state.ssm.astype(jnp.float32))
+    h_fin, ys = jax.vmap(per_batch)(u, dt, bmat, cmat, h0s)
     ys = ys.astype(dt_x)
     y = ys + u * params["d_skip"].astype(dt_x)
     y = y * jax.nn.silu(z)
     out = y @ params["out_proj"].astype(dt_x)
     if return_state:
-        # conv tail: last K-1 pre-conv inputs (from the padded stream)
-        tail = xi_pad[:, -(k - 1):, :] if k > 1 else xi[:, :0, :]
+        # conv tail: last K-1 pre-conv inputs preceding the position after
+        # the final valid token (from the padded/carried stream)
+        if k <= 1:
+            tail = xi[:, :0, :]
+        elif n_valid is None:
+            tail = xi_pad[:, -(k - 1):, :]
+        else:
+            tail = jax.lax.dynamic_slice_in_dim(xi_pad, n_valid, k - 1, axis=1)
         return out, MambaState(conv=tail.astype(jnp.float32), ssm=h_fin)
     return out
 

@@ -181,12 +181,38 @@ def _moe_apply_ep(p, x, *, top_k, act, gated, capacity_factor, ctx):
     if has_gate:
         operands.append(p["gate"])
         in_specs.append(espec)
-    y, aux = jax.shard_map(
+    from repro.distributed.shard_map_compat import shard_map
+    y, aux = shard_map(
         shard_fn, mesh=ctx.mesh,
         in_specs=tuple(in_specs),
         out_specs=(P(bd, None, None), P()),
         check_vma=False,
     )(*operands)
+    return y, aux
+
+
+def moe_apply_rowwise(p: dict, x: jax.Array, *, top_k: int, act: str = "silu",
+                      gated: bool = True) -> tuple[jax.Array, jax.Array]:
+    """Capacity-free per-row top-k dispatch: x [T, d] -> (y [T, d], aux).
+
+    Each row dense-gathers its own k expert weight matrices and runs them as
+    a [T, k]-batched einsum — no expert queue, no capacity, and therefore no
+    cross-row coupling: a row's output depends only on that row. That is the
+    property ragged continuous batching needs (per-request equivalence must
+    hold while slot membership changes every step), and at decode batch
+    sizes (T = n_slots) the gather of k·(2-3)·d·d_ff weights is cheaper than
+    materializing the [E, C, d] queue buffer. The math matches the capacity
+    path exactly whenever that path drops nothing."""
+    t, d = x.shape
+    top_e, top_w, aux = _route(x, p["router"], top_k)           # [T, k]
+    up = jnp.einsum("td,tkdf->tkf", x, p["up"][top_e].astype(x.dtype))
+    if gated:
+        up = act_fn(act)(jnp.einsum("td,tkdf->tkf", x,
+                                    p["gate"][top_e].astype(x.dtype))) * up
+    else:
+        up = act_fn(act)(up)
+    y = jnp.einsum("tkf,tkfd->tkd", up, p["down"][top_e].astype(x.dtype))
+    y = (y * top_w[..., None].astype(x.dtype)).sum(axis=1)
     return y, aux
 
 

@@ -65,8 +65,16 @@ def _wkv_step(s, r, k, v, w, u):
 
 
 def rwkv_time_mix(p: dict, x: jax.Array, state: RWKVLayerState,
-                  head_dim: int) -> tuple[jax.Array, RWKVLayerState]:
-    """x: [B, S, d] -> (y, new state). Single pass over S via lax.scan."""
+                  head_dim: int, n_valid: jax.Array | None = None
+                  ) -> tuple[jax.Array, RWKVLayerState]:
+    """x: [B, S, d] -> (y, new state). Single pass over S via lax.scan,
+    seeded from ``state`` (zero state == from-scratch prefill; a non-zero
+    state continues a chunked prefill mid-prompt).
+
+    ``n_valid``: optional scalar — positions >= n_valid are padding and must
+    be exact state no-ops (k=0 kills the kv update, w=1 keeps the decay
+    identity, and the token-shift carry snapshots position n_valid-1), so a
+    right-padded final chunk leaves the same state as an unpadded one."""
     b, s, d = x.shape
     dt = x.dtype
     h = d // head_dim
@@ -80,6 +88,10 @@ def rwkv_time_mix(p: dict, x: jax.Array, state: RWKVLayerState,
     v = (xv @ p["wv"].astype(dt)).reshape(b, s, h, head_dim)
     g = jax.nn.silu(xg @ p["wg"].astype(dt))
     w = _decay(p, xw).reshape(b, s, h, head_dim)              # f32
+    if n_valid is not None:
+        valid = (jnp.arange(s) < n_valid)[None, :, None, None]
+        k = jnp.where(valid, k, 0.0)
+        w = jnp.where(valid, w, 1.0)
 
     # chunked WKV scan: the inner per-token recurrence is rematted per chunk,
     # so backward stores one wkv state per chunk boundary instead of one per
@@ -99,7 +111,7 @@ def rwkv_time_mix(p: dict, x: jax.Array, state: RWKVLayerState,
     vc = pad_chunk(v.astype(jnp.float32))
     wc = pad_chunk(w, fill=1.0)             # w=1 on pads: state unchanged
 
-    def scan_batch(rb, kb, vb, wb):
+    def scan_batch(rb, kb, vb, wb, s0):
         def step(sh, inp):
             r_t, k_t, v_t, w_t = inp                           # [h, N] each
             s_new, y = jax.vmap(_wkv_step)(sh, r_t, k_t, v_t, w_t,
@@ -109,22 +121,25 @@ def rwkv_time_mix(p: dict, x: jax.Array, state: RWKVLayerState,
         def chunk_step(sh, inp):
             return jax.lax.scan(step, sh, inp)
 
-        s0 = jnp.zeros((h, head_dim, head_dim), jnp.float32)
         s_fin, ys = jax.lax.scan(jax.checkpoint(chunk_step), s0,
                                  (rb, kb, vb, wb))
         return s_fin, ys.reshape(n_chunks * chunk, h, head_dim)[:s]
 
-    s_fin, ys = jax.vmap(scan_batch)(rc, kc, vc, wc)
+    s_fin, ys = jax.vmap(scan_batch)(rc, kc, vc, wc,
+                                     state.wkv.astype(jnp.float32))
     y = ys.reshape(b, s, d).astype(dt)
     y = rms_norm(y, p["ln_x"]) * g
     y = y @ p["wo"].astype(dt)
-    new_state = RWKVLayerState(x_prev_att=x[:, -1, :], x_prev_ffn=state.x_prev_ffn,
+    x_last = (x[:, -1, :] if n_valid is None else
+              jax.lax.dynamic_slice_in_dim(x, n_valid - 1, 1, axis=1)[:, 0])
+    new_state = RWKVLayerState(x_prev_att=x_last, x_prev_ffn=state.x_prev_ffn,
                                wkv=s_fin)
     return y, new_state
 
 
-def rwkv_channel_mix(p: dict, x: jax.Array,
-                     state: RWKVLayerState) -> tuple[jax.Array, RWKVLayerState]:
+def rwkv_channel_mix(p: dict, x: jax.Array, state: RWKVLayerState,
+                     n_valid: jax.Array | None = None
+                     ) -> tuple[jax.Array, RWKVLayerState]:
     dt = x.dtype
     x_prev = jnp.concatenate([state.x_prev_ffn[:, None, :], x[:, :-1, :]], axis=1)
     mix = p["mix_ffn"].astype(dt)
@@ -132,7 +147,9 @@ def rwkv_channel_mix(p: dict, x: jax.Array,
     xr = x * mix[1] + x_prev * (1 - mix[1])
     k = jnp.square(jax.nn.relu(xk @ p["fk"].astype(dt)))
     out = jax.nn.sigmoid(xr @ p["fr"].astype(dt)) * (k @ p["fv"].astype(dt))
-    return out, state._replace(x_prev_ffn=x[:, -1, :])
+    x_last = (x[:, -1, :] if n_valid is None else
+              jax.lax.dynamic_slice_in_dim(x, n_valid - 1, 1, axis=1)[:, 0])
+    return out, state._replace(x_prev_ffn=x_last)
 
 
 def rwkv_time_mix_step(p: dict, x_t: jax.Array, state: RWKVLayerState,

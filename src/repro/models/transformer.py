@@ -528,7 +528,16 @@ class TransformerLM:
             st = mamba_lib.MambaState(conv=slices["mamba_conv"],
                                       ssm=slices["mamba_ssm"])
             m_out, st = mamba_lib.mamba_decode_step(bp["mamba"], h, st)
-            new["mamba_conv"], new["mamba_ssm"] = st.conv, st.ssm
+            if active is None:
+                new["mamba_conv"], new["mamba_ssm"] = st.conv, st.ssm
+            else:
+                # ragged batch: inactive rows carry their recurrent state
+                # through unchanged (there is no "parking row" for a
+                # recurrent state — the row itself is the state)
+                m3 = active[:, None, None]
+                new["mamba_conv"] = jnp.where(m3, st.conv,
+                                              slices["mamba_conv"])
+                new["mamba_ssm"] = jnp.where(m3, st.ssm, slices["mamba_ssm"])
             x = x + 0.5 * (rms_norm(attn_out, bp["ln_attn_out"], cfg.norm_eps)
                            + rms_norm(m_out, bp["ln_mamba_out"], cfg.norm_eps))
         else:
@@ -541,10 +550,13 @@ class TransformerLM:
             new["cross_k"], new["cross_v"] = slices["cross_k"], slices["cross_v"]
         h2 = rms_norm(x, bp["ln2"], cfg.norm_eps)
         if cfg.n_experts:
-            y, _ = moe_lib.moe_apply(bp["ffn"], h2[:, None, :], top_k=cfg.top_k,
-                                     act=cfg.act, gated=cfg.gated_mlp,
-                                     capacity_factor=cfg.capacity_factor)
-            y = y[:, 0, :]
+            # capacity-free per-row dispatch at decode: identical math to the
+            # capacity path when nothing drops, but a row's output depends
+            # only on that row — batch composition can't perturb a request
+            # (ragged serving's per-request-equivalence contract), and at
+            # B = n_slots it is also the cheaper form
+            y, _ = moe_lib.moe_apply_rowwise(bp["ffn"], h2, top_k=cfg.top_k,
+                                             act=cfg.act, gated=cfg.gated_mlp)
         else:
             y = mlp_apply(bp["ffn"], h2, cfg.act, cfg.gated_mlp)
         return x + y, new
@@ -558,14 +570,13 @@ class TransformerLM:
         Active rows decode normally; inactive rows (free or mid-prefill
         slots) ride through with a parked KV write, a stub attention length,
         and *no* ``len`` advance, so the jit'd step keeps a static [B] shape
-        while slot membership changes between steps. The per-row
-        incremental-RoPE state still advances for every row; a slot's state
-        is reseeded by ``finalize_slot`` when a new request fills it."""
+        while slot membership changes between steps. Recurrent-state
+        families (ssm / hybrid) have no parking row — the row *is* the
+        state — so inactive rows carry their (wkv / conv, ssm) state through
+        unchanged via ``jnp.where`` selects. The per-row incremental-RoPE
+        state still advances for every row; a slot's state is reseeded by
+        ``finalize_slot`` when a new request fills it."""
         cfg = self.cfg
-        if active is not None and cfg.family in ("ssm", "hybrid"):
-            raise NotImplementedError(
-                "ragged decode: recurrent-state families would need masked "
-                "state updates")
         if active is not None and cfg.kv_ring and cfg.window:
             raise NotImplementedError(
                 "ragged decode: a ring cache has no reserved tail row — the "
@@ -573,7 +584,7 @@ class TransformerLM:
         x = params["embed"].astype(self._dt)[tokens]             # [B, d]
 
         if cfg.family == "ssm":
-            return self._rwkv_decode_step(params, x, cache)
+            return self._rwkv_decode_step(params, x, cache, active)
 
         n_cross = self._n_cross_groups()
 
@@ -777,16 +788,24 @@ class TransformerLM:
 
     # ---- slot-targeted ragged prefill (continuous batching) ----------------
     def supports_ragged_serving(self) -> bool:
-        """Chunked slot prefill + masked ragged decode cover the dense
-        self-attention KV families; recurrent-state and cross-attention
-        stacks would need sequential per-slot state threading, and MoE
-        capacity-factor dispatch couples rows across the batch (token drop
-        depends on batch composition), which would break the per-request
-        greedy-equivalence guarantee."""
+        """Chunked slot prefill + masked ragged decode cover the dense-KV
+        families, the recurrent-state families (ssm / hybrid: per-slot state
+        threading in ``prefill_chunk``, masked ``jnp.where`` state carries in
+        ``decode_step``), and MoE. The continuous MoE path is *drop-free by
+        construction* (per-row dispatch at decode, capacity=C dispatch in
+        chunk prefill), so a request's tokens never depend on batch
+        composition; greedy equivalence against the lock-step engine is
+        exact whenever the lock-step capacity-factor prefill itself drops
+        nothing — under routing imbalance at low ``capacity_factor`` the
+        *reference* drops tokens and the drop-free continuous output is the
+        more faithful one.
+
+        Still gated: cross-attention stacks (vlm / audio — per-slot source
+        KV would need its own pool) and ring KV caches (no reserved tail row
+        for the parked masked write)."""
         cfg = self.cfg
-        return (cfg.family not in ("ssm", "hybrid", "audio")
+        return (cfg.family not in ("audio",)
                 and not cfg.cross_attn_every
-                and not cfg.n_experts
                 and not (cfg.kv_ring and cfg.window))
 
     def prefill_chunk(self, params: Params, tokens: jax.Array, cache: Cache,
@@ -808,12 +827,21 @@ class TransformerLM:
 
         Only chunk position ``last`` is unembedded (the caller needs one
         row of logits, on the final chunk — anything else would burn a
-        [C, V] projection per chunk). Returns (logits [V] f32, cache)."""
+        [C, V] projection per chunk). Returns (logits [V] f32, cache).
+
+        Recurrent families thread per-slot state: the ssm (RWKV) stack has
+        no KV at all and runs :meth:`_rwkv_prefill_chunk`; hybrid layers
+        continue the slot's (conv, ssm) Mamba state chunk to chunk, with
+        padded tail positions masked into exact state no-ops. MoE FFNs use
+        the capacity-free per-row dispatch (a padded position must not steal
+        expert capacity from a real token)."""
         cfg = self.cfg
         if not self.supports_ragged_serving():
             raise NotImplementedError(
                 f"prefill_chunk: unsupported config {cfg.name} "
-                "(recurrent state / cross-attention / ring KV)")
+                "(cross-attention / ring KV)")
+        if cfg.family == "ssm":
+            return self._rwkv_prefill_chunk(params, tokens, cache, slot, last)
         (c,) = tokens.shape
         dh = cfg.resolved_head_dim
         smax, hkv = cache["k"].shape[2], cfg.n_kv_heads
@@ -821,9 +849,11 @@ class TransformerLM:
         positions = offset + jnp.arange(c)
         kv_len = jnp.reshape(offset + c, (1,)).astype(jnp.int32)
         q_off = jnp.reshape(offset, (1,)).astype(jnp.int32)
+        n_valid = last + 1
 
         def step(x, xs):
             bp, slices = xs
+            new = {}
             ap = bp["attn"]
             h = rms_norm(x, bp["ln1"], cfg.norm_eps)
             q, k, v = self._qkv_rope(ap, h, positions)
@@ -839,14 +869,100 @@ class TransformerLM:
                 q, k_slot, v_slot, causal=True, window=cfg.window,
                 kv_lengths=kv_len, q_offset=q_off,
                 kv_block=cfg.attn_block or 512)
-            x = x + linear(ap, "wo", attn.reshape(1, c, -1))
-            y, _ = self._ffn_out(bp, x)
-            return x + y, {"k": kc, "v": vc}
+            attn_out = linear(ap, "wo", attn.reshape(1, c, -1))
+            new["k"], new["v"] = kc, vc
+            if cfg.family == "hybrid":
+                d_inner = cfg.ssm_expand * cfg.d_model
+                conv0 = jax.lax.dynamic_slice(
+                    slices["mamba_conv"], (slot, 0, 0),
+                    (1, cfg.ssm_conv - 1, d_inner))
+                ssm0 = jax.lax.dynamic_slice(
+                    slices["mamba_ssm"], (slot, 0, 0),
+                    (1, d_inner, cfg.ssm_state))
+                m_out, mst = mamba_lib.mamba_forward(
+                    bp["mamba"], h, return_state=True,
+                    state=mamba_lib.MambaState(conv=conv0, ssm=ssm0),
+                    n_valid=n_valid)
+                new["mamba_conv"] = jax.lax.dynamic_update_slice(
+                    slices["mamba_conv"], mst.conv, (slot, 0, 0))
+                new["mamba_ssm"] = jax.lax.dynamic_update_slice(
+                    slices["mamba_ssm"], mst.ssm, (slot, 0, 0))
+                x = x + 0.5 * (rms_norm(attn_out, bp["ln_attn_out"],
+                                        cfg.norm_eps)
+                               + rms_norm(m_out, bp["ln_mamba_out"],
+                                          cfg.norm_eps))
+            else:
+                x = x + attn_out
+            h2 = rms_norm(x, bp["ln2"], cfg.norm_eps)
+            if cfg.n_experts:
+                # capacity = chunk length C: each token assigns an expert at
+                # most once, so per-expert load <= C and nothing can drop —
+                # drop-free capacity dispatch equals the per-row form
+                # exactly, padded positions can't evict real tokens, and the
+                # [E, C, d] queue stays small (the per-row dense gather
+                # would materialize C*k full expert matrices per layer)
+                y, _ = moe_lib.moe_apply(bp["ffn"], h2, top_k=cfg.top_k,
+                                         act=cfg.act, gated=cfg.gated_mlp,
+                                         capacity=c)
+            else:
+                y = mlp_apply(bp["ffn"], h2, cfg.act, cfg.gated_mlp)
+            return x + y, new
 
-        x, new = layer_scan(step, x, (params["blocks"],
-                                      {"k": cache["k"], "v": cache["v"]}),
+        self_slices = {"k": cache["k"], "v": cache["v"]}
+        if cfg.family == "hybrid":
+            self_slices["mamba_conv"] = cache["mamba_conv"]
+            self_slices["mamba_ssm"] = cache["mamba_ssm"]
+        x, new = layer_scan(step, x, (params["blocks"], self_slices),
                             unroll=cfg.unroll_layers)
-        cache = dict(cache, k=new["k"], v=new["v"])
+        cache = dict(cache)
+        for key, val in new.items():
+            cache[key] = val
+        x_last = jax.lax.dynamic_slice(x, (0, last, 0),
+                                       (1, 1, cfg.d_model))[:, 0]
+        x_last = rms_norm(x_last, params["ln_f"], cfg.norm_eps)
+        return self._unembed(params, x_last)[0], cache
+
+    def _rwkv_prefill_chunk(self, params: Params, tokens: jax.Array,
+                            cache: Cache, slot: jax.Array, last: jax.Array
+                            ) -> tuple[jax.Array, Cache]:
+        """One prompt chunk through the RWKV stack for a single slot: the
+        slot's per-layer (x_prev, wkv) state seeds the chunk scan and the
+        post-chunk state is written back, so successive chunks compose into
+        exactly the full-prompt recurrence. Positions past ``last`` are
+        padding — masked into state no-ops inside the mix kernels. The slot
+        has no KV rows; ``offset`` is implicit in the carried state."""
+        cfg = self.cfg
+        x = params["embed"].astype(self._dt)[tokens][None]       # [1, C, d]
+        n_valid = last + 1
+        att0 = jax.lax.dynamic_slice_in_dim(cache["rwkv_att"], slot, 1, axis=1)
+        ffn0 = jax.lax.dynamic_slice_in_dim(cache["rwkv_ffn"], slot, 1, axis=1)
+        wkv0 = jax.lax.dynamic_slice_in_dim(cache["rwkv_wkv"], slot, 1, axis=1)
+
+        def step(x, xs):
+            bp, att_prev, ffn_prev, wkv = xs                     # [1, ...]
+            st = rwkv_lib.RWKVLayerState(att_prev.astype(self._dt),
+                                         ffn_prev.astype(self._dt), wkv)
+            h = rms_norm(x, bp["ln1"], cfg.norm_eps)
+            y, st = rwkv_lib.rwkv_time_mix(bp["mix"], h, st,
+                                           cfg.rwkv_head_dim, n_valid=n_valid)
+            x = x + y
+            h2 = rms_norm(x, bp["ln2"], cfg.norm_eps)
+            y2, st = rwkv_lib.rwkv_channel_mix(bp["mix"], h2, st,
+                                               n_valid=n_valid)
+            return x + y2, (st.x_prev_att.astype(att_prev.dtype),
+                            st.x_prev_ffn.astype(ffn_prev.dtype), st.wkv)
+
+        x, (att, ffn, wkv) = layer_scan(step, x,
+                                        (params["blocks"], att0, ffn0, wkv0),
+                                        unroll=cfg.unroll_layers)
+        cache = dict(
+            cache,
+            rwkv_att=jax.lax.dynamic_update_slice_in_dim(
+                cache["rwkv_att"], att, slot, axis=1),
+            rwkv_ffn=jax.lax.dynamic_update_slice_in_dim(
+                cache["rwkv_ffn"], ffn, slot, axis=1),
+            rwkv_wkv=jax.lax.dynamic_update_slice_in_dim(
+                cache["rwkv_wkv"], wkv, slot, axis=1))
         x_last = jax.lax.dynamic_slice(x, (0, last, 0),
                                        (1, 1, cfg.d_model))[:, 0]
         x_last = rms_norm(x_last, params["ln_f"], cfg.norm_eps)
@@ -872,8 +988,16 @@ class TransformerLM:
     def release_slot(self, cache: Cache, slot: jax.Array) -> Cache:
         """Reset-on-release: drop the slot's length to zero so nothing in
         its KV rows is attended again; the next occupant's prefill
-        overwrites the contents in place."""
-        return dict(cache, len=cache["len"].at[slot].set(0))
+        overwrites the contents in place. Recurrent state (RWKV x_prev/wkv,
+        Mamba conv/ssm) is *zeroed*, not just ignored — unlike KV rows it
+        feeds forward multiplicatively, so the next occupant's first chunk
+        must start from the empty-context state."""
+        cache = dict(cache, len=cache["len"].at[slot].set(0))
+        for key in ("rwkv_att", "rwkv_ffn", "rwkv_wkv",
+                    "mamba_conv", "mamba_ssm"):
+            if key in cache:
+                cache[key] = cache[key].at[:, slot].set(0)
+        return cache
 
     def _rwkv_prefill(self, params: Params, x: jax.Array,
                       cache: Cache) -> tuple[jax.Array, Cache]:
@@ -900,8 +1024,9 @@ class TransformerLM:
         x = rms_norm(x[:, -1, :], params["ln_f"], cfg.norm_eps)
         return self._unembed(params, x), cache
 
-    def _rwkv_decode_step(self, params: Params, x: jax.Array,
-                          cache: Cache) -> tuple[jax.Array, Cache]:
+    def _rwkv_decode_step(self, params: Params, x: jax.Array, cache: Cache,
+                          active: jax.Array | None = None
+                          ) -> tuple[jax.Array, Cache]:
         cfg = self.cfg
 
         def step(x, xs):
@@ -914,12 +1039,20 @@ class TransformerLM:
             x = x + y
             h2 = rms_norm(x, bp["ln2"], cfg.norm_eps)
             y2, st = rwkv_lib.rwkv_channel_mix_step(bp["mix"], h2, st)
-            return x + y2, (st.x_prev_att, st.x_prev_ffn, st.wkv)
+            att_new, ffn_new, wkv_new = st.x_prev_att, st.x_prev_ffn, st.wkv
+            if active is not None:
+                # ragged batch: inactive rows are exact state no-ops
+                m = active[:, None]
+                att_new = jnp.where(m, att_new, att_prev)
+                ffn_new = jnp.where(m, ffn_new, ffn_prev)
+                wkv_new = jnp.where(active[:, None, None, None], wkv_new, wkv)
+            return x + y2, (att_new, ffn_new, wkv_new)
 
         x, (att, ffn, wkv) = layer_scan(
             step, x, (params["blocks"], cache["rwkv_att"], cache["rwkv_ffn"],
                       cache["rwkv_wkv"]), unroll=cfg.unroll_layers)
         cache = dict(cache, rwkv_att=att, rwkv_ffn=ffn, rwkv_wkv=wkv,
-                     len=cache["len"] + 1)
+                     len=cache["len"] + (1 if active is None
+                                         else active.astype(jnp.int32)))
         x = rms_norm(x, params["ln_f"], cfg.norm_eps)
         return self._unembed(params, x), cache

@@ -16,11 +16,26 @@ mask carries which slots hold live requests. Each engine step:
 
 Greedy outputs are token-for-token identical to per-request
 ``ServingEngine.generate`` (tested in tests/test_serving_continuous.py):
-chunked prefill reuses the same blockwise ``prefill_attention`` math, and
-masked-out cache rows are exact no-ops in the (mu, Z, Y) recurrence.
+chunked prefill reuses the same blockwise ``prefill_attention`` math,
+masked-out cache rows are exact no-ops in the (mu, Z, Y) recurrence,
+recurrent-state rows (ssm / hybrid) carry through masked decode steps
+unchanged, and MoE rows use the capacity-free per-row dispatch so batch
+composition can never perturb a request.
+
+Sampling (temperature > 0) is fused into the jit'd decode program as
+seeded per-slot Gumbel-max (``argmax(logits/T + g)`` with
+``g ~ Gumbel(0,1)`` is exactly a softmax(logits/T) draw), so the device ->
+host transfer is the same ``[n_slots]`` int32 on both greedy and sampled
+paths — never the ``[n_slots, V]`` logits. Keys derive from
+``(seed, request admission serial, token index)`` — properties of the
+*request*, not of the engine's step counters — so a request's sampled
+tokens are independent of batch composition and of how prefill chunks and
+decode ticks interleave: a fresh engine replays a (seed, trace) pair
+token-for-token even under timed Poisson arrivals.
 """
 from __future__ import annotations
 
+import math
 import time
 
 import jax
@@ -31,16 +46,24 @@ from .scheduler import Request, RequestState, Scheduler
 from .slot_pool import KVSlotPool
 
 
+def _pct(xs, q):
+    """Nearest-rank percentile of an ascending-sorted list: element
+    ceil(q*n)-1 (so p50 of [a, b] is a, and p95 only hits the max within
+    5% of the tail) — truncation indexing overshoots on short lists."""
+    if not xs:
+        return None
+    return round(float(xs[max(0, math.ceil(q * len(xs)) - 1)]), 4)
+
+
 class ContinuousBatchingEngine:
     def __init__(self, model, params, *, n_slots: int, max_len: int,
                  chunk: int = 16, eos_id: int | None = None,
                  pad_id: int = 0, temperature: float = 0.0, seed: int = 0):
         if not getattr(model, "supports_ragged_serving", lambda: False)():
             raise ValueError(
-                f"{model.cfg.name}: continuous batching needs a dense "
-                "self-attention KV family (no recurrent state, "
-                "cross-attention, MoE capacity-factor dispatch, or "
-                "ring cache)")
+                f"{model.cfg.name}: continuous batching needs a "
+                "slot-serializable decode state (cross-attention source KV "
+                "and ring KV caches are not poolable yet)")
         if chunk < 1 or max_len % chunk:
             raise ValueError(f"chunk ({chunk}) must divide max_len "
                              f"({max_len}) so padded chunks stay in range")
@@ -48,26 +71,50 @@ class ContinuousBatchingEngine:
         self.chunk, self.eos_id, self.pad_id = chunk, eos_id, pad_id
         self.temperature = temperature
         self._t0 = time.perf_counter()          # reset by run()
-        self._seed = seed
-        self._rng = np.random.default_rng(seed)
         self.pool = KVSlotPool(n_slots, max_len)
         self.sched = Scheduler(self.pool)
         self._prefill_chunk = jax.jit(model.prefill_chunk,
                                       donate_argnums=(2,))
         self._finalize = jax.jit(model.finalize_slot, donate_argnums=(0,))
         self._release = jax.jit(model.release_slot, donate_argnums=(0,))
-        self._decode = jax.jit(model.decode_step, donate_argnums=(2,))
 
-        def _decode_greedy(params, tok, cache, active):
-            # greedy path: argmax fused into the decode program — one
-            # dispatch per step, and only [n_slots] int32 leaves the device
-            # instead of the [n_slots, V] logits
+        # sampler keys: (seed, request admission serial, token index) —
+        # request-intrinsic, so a draw can't depend on batch composition or
+        # on how the scheduler interleaved prefill chunks with decode ticks
+        base_key = jax.random.PRNGKey(seed)
+
+        def _gumbel_pick(logits, serial, token_idx):
+            key = jax.random.fold_in(jax.random.fold_in(base_key, serial),
+                                     token_idx)
+            g = jax.random.gumbel(key, logits.shape, logits.dtype)
+            return jnp.argmax(logits / temperature + g,
+                              axis=-1).astype(jnp.int32)
+
+        def _decode_pick(params, tok, cache, active, serials, emitted):
+            # decode + sample in one dispatch: only [n_slots] int32 leaves
+            # the device on both greedy and sampled paths
             logits, cache = model.decode_step(params, tok, cache, active)
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
-        self._decode_greedy = jax.jit(_decode_greedy, donate_argnums=(2,))
+            if temperature == 0.0:
+                return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+            return jax.vmap(_gumbel_pick)(logits, serials, emitted), cache
+        self._decode_pick = jax.jit(_decode_pick, donate_argnums=(2,))
+
+        def _prefill_pick(logits_row, serial):
+            # first token off a finalized prefill: [V] -> scalar int32
+            if temperature == 0.0:
+                return jnp.argmax(logits_row).astype(jnp.int32)
+            return _gumbel_pick(logits_row, serial, jnp.int32(0))
+        self._prefill_pick = jax.jit(_prefill_pick)
+
         self.cache = model.init_cache(n_slots, max_len)
         self.tok = np.full((n_slots,), pad_id, np.int32)
         self.active = np.zeros((n_slots,), bool)
+        # per-slot sampler state: admission serial of the occupying request
+        # and how many tokens it has emitted (its next draw's token index)
+        self.serial = np.zeros((n_slots,), np.int32)
+        self.emitted = np.zeros((n_slots,), np.int32)
+        self._serials: dict = {}        # rid -> serial, mid-prefill only
+        self._serial_ctr = 0
         # counters for occupancy / utilization reporting
         self.decode_steps = 0
         self.prefill_chunks = 0
@@ -75,27 +122,24 @@ class ContinuousBatchingEngine:
 
     # ---- intake -----------------------------------------------------------
     def submit(self, request: Request, now: float = 0.0) -> RequestState:
-        return self.sched.submit(request, now)
+        state = self.sched.submit(request, now)
+        if state.status != "rejected":
+            # admission order is FIFO over submission order, so the serial
+            # is a deterministic property of the trace
+            self._serials[state.rid] = self._serial_ctr
+            self._serial_ctr += 1
+        return state
 
     def warmup(self) -> "ContinuousBatchingEngine":
         """Compile the chunk / finalize / decode / release programs with a
         throwaway multi-chunk request. ``run`` drops finished-traffic stats
-        at entry, so only the sampler RNG needs rewinding here for reports
-        and sampling to cover real traffic only."""
+        at entry so reports cover real traffic only; the warmup request
+        consumes exactly one sampler serial, so two warmed-up engines with
+        the same seed still draw identical streams."""
         p = max(1, min(self.chunk + 1, self.pool.capacity - 2))
         self.run([Request(prompt=np.zeros(p, np.int32), max_new_tokens=2,
                           rid="__warmup__")])
-        self._rng = np.random.default_rng(self._seed)   # un-burn the sampler
         return self
-
-    # ---- sampling ---------------------------------------------------------
-    def _sample(self, logits_row: np.ndarray) -> int:
-        if self.temperature == 0.0:
-            return int(np.argmax(logits_row))
-        z = logits_row.astype(np.float64) / self.temperature
-        z -= z.max()
-        p = np.exp(z)
-        return int(self._rng.choice(p.size, p=p / p.sum()))
 
     # ---- one engine step --------------------------------------------------
     def step(self, now: float | None = None) -> bool:
@@ -111,22 +155,16 @@ class ContinuousBatchingEngine:
             return self.sched.pending()
 
         tok, act = jnp.asarray(self.tok), jnp.asarray(self.active)
-        if self.temperature == 0.0:
-            picks, self.cache = self._decode_greedy(self.params, tok,
-                                                    self.cache, act)
-            rows = np.asarray(picks)
-            pick = lambda slot: int(rows[slot])
-        else:
-            logits, self.cache = self._decode(self.params, tok,
-                                              self.cache, act)
-            rows = np.asarray(logits)
-            pick = lambda slot: self._sample(rows[slot])
+        picks, self.cache = self._decode_pick(
+            self.params, tok, self.cache, act,
+            jnp.asarray(self.serial), jnp.asarray(self.emitted))
+        rows = np.asarray(picks)
         self.decode_steps += 1
         self.active_row_steps += int(self.active.sum())
         for slot in np.flatnonzero(self.active):
             state = self.sched.decoding[int(slot)]
             self.pool.advance(int(slot))
-            self._emit(state, pick(slot))
+            self._emit(state, int(rows[slot]))
         return True
 
     def _advance_prefill(self, state: RequestState) -> None:
@@ -144,11 +182,14 @@ class ContinuousBatchingEngine:
         state.prefilled = min(off + self.chunk, len(prompt))
         if state.prefilled < len(prompt):
             return    # non-final chunk: logits row never fetched from device
-        # final chunk: commit the slot, sample the first token
+        # final chunk: commit the slot, sample the first token on device
+        # (a scalar int32 transfer, not the [V] logits row)
         self.cache = self._finalize(self.cache, jnp.int32(state.slot),
                                     len(prompt))
         self.sched.start_decoding(state)
-        self._emit(state, self._sample(np.asarray(logits)))
+        self.serial[state.slot] = self._serials.pop(state.rid)
+        self._emit(state, int(self._prefill_pick(
+            logits, jnp.int32(self.serial[state.slot]))))
 
     def _emit(self, state: RequestState, token: int) -> None:
         # stamped here, after np.asarray blocked on the device work that
@@ -169,6 +210,7 @@ class ContinuousBatchingEngine:
         else:
             self.active[state.slot] = True
             self.tok[state.slot] = token
+            self.emitted[state.slot] = len(state.tokens)
 
     # ---- drive a whole trace ----------------------------------------------
     def run(self, requests: list[Request] | None = None) -> dict:
@@ -203,11 +245,6 @@ class ContinuousBatchingEngine:
         gen = sum(len(s.tokens) for s in done)
         ttfts = sorted(s.ttft for s in done if s.ttft is not None)
         itls = sorted(x for s in done for x in s.itl_ms)
-
-        def pct(xs, q):
-            return round(float(xs[min(len(xs) - 1,
-                                      int(q * len(xs)))]), 4) if xs else None
-
         return {
             "requests": [{
                 "rid": s.rid, "prompt_len": int(len(s.request.prompt)),
@@ -228,9 +265,9 @@ class ContinuousBatchingEngine:
                     self.active_row_steps
                     / (self.decode_steps * self.pool.n_slots), 3)
                     if self.decode_steps else 0.0,
-                "ttft_p50_s": pct(ttfts, 0.50),
-                "ttft_p95_s": pct(ttfts, 0.95),
-                "itl_p50_ms": pct(itls, 0.50),
-                "itl_p95_ms": pct(itls, 0.95),
+                "ttft_p50_s": _pct(ttfts, 0.50),
+                "ttft_p95_s": _pct(ttfts, 0.95),
+                "itl_p50_ms": _pct(itls, 0.50),
+                "itl_p95_ms": _pct(itls, 0.95),
             },
         }

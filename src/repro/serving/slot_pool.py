@@ -16,7 +16,11 @@ Layout contract with :meth:`TransformerLM.decode_step`'s ragged form:
 * release resets the slot's ledger length (and the device ``len`` entry via
   :meth:`TransformerLM.release_slot`), so nothing in a freed slot's KV rows
   is ever attended again — the next occupant's chunked prefill overwrites
-  the contents in place (reset-on-release).
+  the contents in place (reset-on-release). Recurrent-state families
+  (ssm / hybrid) additionally zero the slot's per-row state (RWKV
+  x_prev/wkv, Mamba conv/ssm) on release: unlike KV rows it feeds forward
+  multiplicatively, so the next occupant must start from the empty-context
+  state rather than merely ignoring stale rows.
 """
 from __future__ import annotations
 

@@ -1,6 +1,7 @@
 """Continuous-batching subsystem: slot-pool invariants, scheduler
 conservation, post-EOS pad emission, and end-to-end greedy equivalence of
-continuous batching vs per-request lock-step generation."""
+continuous batching vs per-request lock-step generation — across the dense,
+recurrent-state (ssm / hybrid), and MoE families."""
 from __future__ import annotations
 
 import jax
@@ -8,11 +9,12 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import get_config
+from repro.configs import ARCH_IDS, get_config
 from repro.models.api import build_model
 from repro.serving import (ContinuousBatchingEngine, KVSlotPool, Request,
                            Scheduler, ServingEngine, SlotPoolError,
                            poisson_trace)
+from repro.serving.continuous import _pct
 
 jax.config.update("jax_platform_name", "cpu")
 
@@ -148,7 +150,10 @@ def test_lockstep_post_eos_emits_pad(dense_model):
 
 @pytest.mark.parametrize("arch", ["llama2-7b",       # MHA dense
                                   "qwen3-8b",        # GQA + qk_norm
-                                  "h2o-danube-1.8b"  # GQA + SWA window
+                                  "h2o-danube-1.8b",  # GQA + SWA window
+                                  "rwkv6-3b",        # ssm: pure recurrent
+                                  "hymba-1.5b",      # hybrid: attn + mamba
+                                  "olmoe-1b-7b",     # MoE top-8 + qk_norm
                                   ])
 def test_continuous_matches_per_request_greedy(arch, dense_model):
     """Every request's continuous-batching output must equal its
@@ -210,12 +215,82 @@ def test_continuous_respects_slot_capacity(dense_model):
 
 
 def test_continuous_gates_unsupported_families():
-    cfg = get_config("rwkv6-3b", reduced=True)     # ssm family
+    # ring KV cache: the parked masked write would land on a live ring slot
+    cfg = get_config("h2o-danube-1.8b", reduced=True).replace(kv_ring=True)
     model = build_model(cfg)
     params = model.init_params(jax.random.PRNGKey(0))
     with pytest.raises(ValueError):
         ContinuousBatchingEngine(model, params, n_slots=2, max_len=32,
                                  chunk=8)
+    # audio (encoder-decoder cross-attention): per-slot source KV unpooled
+    wcfg = get_config("whisper-small", reduced=True)
+    wmodel = build_model(wcfg)
+    with pytest.raises(ValueError):
+        ContinuousBatchingEngine(wmodel, {}, n_slots=2, max_len=32, chunk=8)
+
+
+def test_ragged_serving_claims_hold():
+    """Every config that claims ``supports_ragged_serving()`` must actually
+    serve a tiny ragged trace (no NotImplementedError mid-flight — CI fails
+    on a claim the model layer can't back); every config that doesn't claim
+    it must be rejected at engine construction."""
+    for arch in ARCH_IDS:
+        cfg = get_config(arch, reduced=True)
+        model = build_model(cfg)
+        claims = getattr(model, "supports_ragged_serving", lambda: False)()
+        if not claims:
+            with pytest.raises(ValueError):
+                ContinuousBatchingEngine(model, {}, n_slots=2, max_len=32,
+                                         chunk=8)
+            continue
+        params = model.init_params(jax.random.PRNGKey(0))
+        eng = ContinuousBatchingEngine(model, params, n_slots=2, max_len=32,
+                                       chunk=8)
+        report = eng.run([
+            Request(prompt=np.arange(1, 6, dtype=np.int32),
+                    max_new_tokens=3, rid="a"),
+            Request(prompt=np.arange(2, 12, dtype=np.int32),
+                    max_new_tokens=2, rid="b"),
+        ])
+        assert report["aggregate"]["n_retired"] == 2, arch
+        assert all(r["n_tokens"] > 0 for r in report["requests"]), arch
+
+
+def test_fused_sampler_seeded_reproducible(dense_model):
+    """temperature > 0 sampling runs on device (per-slot Gumbel-max keyed on
+    (seed, request admission serial, token index)): a fixed (seed, trace)
+    replays token-for-token — even with timed arrivals, where the wall clock
+    changes how prefill chunks and decode ticks interleave — and a different
+    seed draws a different stream."""
+    cfg, model, params = dense_model
+    # rate > 0: requests arrive over ~50 ms, so interleaving varies run to
+    # run while the sampled tokens must not
+    trace = poisson_trace(n_requests=5, vocab_size=cfg.vocab_size,
+                          prompt_len=(3, 18), max_new=(4, 10), seed=3,
+                          rate=100.0)
+
+    def run(seed):
+        eng = ContinuousBatchingEngine(model, params, n_slots=2, max_len=64,
+                                       chunk=8, temperature=0.8, seed=seed)
+        eng.warmup()     # warmup must not perturb the sampled stream
+        rep = eng.run(list(trace))
+        return {r["rid"]: r["tokens"] for r in rep["requests"]}
+
+    first = run(7)
+    assert run(7) == first
+    assert run(8) != first
+
+
+def test_report_pct_nearest_rank():
+    assert _pct([], 0.5) is None
+    assert _pct([1.0, 2.0], 0.50) == 1.0     # p50 of 2 is the lower element
+    assert _pct([1.0, 2.0], 0.95) == 2.0
+    assert _pct([1.0, 2.0, 3.0], 0.50) == 2.0
+    xs = [float(i) for i in range(1, 101)]
+    assert _pct(xs, 0.50) == 50.0            # ceil(.5*100)-1 -> index 49
+    assert _pct(xs, 0.95) == 95.0
+    assert _pct(xs, 1.00) == 100.0
+    assert _pct([4.2], 0.95) == 4.2
 
 
 def test_continuous_chunk_must_divide_max_len(dense_model):
