@@ -8,7 +8,12 @@ through both engines and compares useful-token throughput:
   decodes for its longest member's budget (the padding + convoy waste this
   subsystem exists to remove);
 * **continuous** — ``ContinuousBatchingEngine``: chunked slot prefill,
-  per-slot retirement, immediate backfill.
+  per-slot retirement, immediate backfill, and multi-tick decode blocks
+  (``--decode-ticks K``: K fused ticks per dispatch with on-device
+  retirement — the host syncs once per K tokens; see
+  ``repro.serving.continuous``). The JSON carries the engine's dispatch
+  accounting (``dispatches_per_token``, ``host_syncs``) so the round-trip
+  collapse is measurable, not just inferable from wall clock.
 
 Both engines run the same jit'd model; tokens are counted as each request's
 ``max_new_tokens`` (useful tokens only — lock-step's over-generated padding
@@ -17,12 +22,13 @@ rows don't count). Emits a ``BENCH_serving.json`` summary.
 ``--arch`` takes a comma-separated list (the JSON becomes a list of per-arch
 results), and ``--verify`` re-checks the continuous engine's greedy outputs
 token-for-token against per-request ``ServingEngine.generate`` — the
-per-request-equivalence contract that now also covers the recurrent-state
-(rwkv6-3b, hymba-1.5b) and MoE (olmoe-1b-7b) families.
+per-request-equivalence contract that covers the recurrent-state
+(rwkv6-3b, hymba-1.5b) and MoE (olmoe-1b-7b) families and holds at every
+tick horizon.
 
     PYTHONPATH=src python benchmarks/serving_bench.py --reduced
     PYTHONPATH=src python benchmarks/serving_bench.py --reduced --verify \
-        --arch rwkv6-3b,hymba-1.5b,olmoe-1b-7b
+        --arch rwkv6-3b,hymba-1.5b,olmoe-1b-7b --decode-ticks 8
 """
 from __future__ import annotations
 
@@ -74,9 +80,11 @@ def lockstep_runner(model, params, trace, *, n_slots, max_len, pad_id=0):
     return one_pass
 
 
-def continuous_runner(model, params, trace, *, n_slots, max_len, chunk, seed):
+def continuous_runner(model, params, trace, *, n_slots, max_len, chunk, seed,
+                      decode_ticks):
     eng = ContinuousBatchingEngine(model, params, n_slots=n_slots,
-                                   max_len=max_len, chunk=chunk, seed=seed)
+                                   max_len=max_len, chunk=chunk, seed=seed,
+                                   decode_ticks=decode_ticks)
     eng.warmup()
     holder = {}
 
@@ -133,6 +141,10 @@ def main(argv=None) -> int:
     ap.add_argument("--gen-min", type=int, default=4)
     ap.add_argument("--gen-max", type=int, default=128)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--decode-ticks", type=int, default=8,
+                    help="fused decode ticks per dispatch (K): the host "
+                         "syncs once per K tokens; on-device retirement "
+                         "keeps per-request outputs exact at any K")
     ap.add_argument("--repeats", type=int, default=3,
                     help="timed passes per engine; best taken")
     ap.add_argument("--json", default="BENCH_serving.json")
@@ -184,7 +196,8 @@ def run_arch(arch: str, args) -> tuple[dict, int]:
     cont_runner = continuous_runner(model, params, trace,
                                     n_slots=args.n_slots,
                                     max_len=args.max_len,
-                                    chunk=args.chunk, seed=args.seed)
+                                    chunk=args.chunk, seed=args.seed,
+                                    decode_ticks=args.decode_ticks)
     best = best_of_interleaved({
         "lockstep": lockstep_runner(model, params, trace,
                                     n_slots=args.n_slots,
@@ -197,7 +210,9 @@ def run_arch(arch: str, args) -> tuple[dict, int]:
           f"{lock['padded_prompt_len']})")
     print(f"  continuous: {cont['tokens_per_s']:8.1f} tok/s "
           f"({cont['wall_s']}s, occupancy {cont['mean_occupancy']}, "
-          f"ttft p50 {cont['ttft_p50_s']}s)")
+          f"ttft p50 {cont['ttft_p50_s']}s, decode_ticks "
+          f"{args.decode_ticks}, {cont['dispatches_per_token']} "
+          f"dispatches/token, {cont['host_syncs']} host syncs)")
 
     speedup = round(cont["tokens_per_s"] / lock["tokens_per_s"], 3)
     status = "PASS" if speedup >= SPEEDUP_TARGET else "MISS"
@@ -209,6 +224,7 @@ def run_arch(arch: str, args) -> tuple[dict, int]:
         "arch": cfg.name, "reduced": args.reduced,
         "n_slots": args.n_slots, "n_requests": len(trace),
         "max_len": args.max_len, "chunk": args.chunk,
+        "decode_ticks": args.decode_ticks,
         "prompt_len": [args.prompt_min, args.prompt_max],
         "max_new": [args.gen_min, args.gen_max],
         "lockstep": lock, "continuous": cont,

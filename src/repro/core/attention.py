@@ -35,7 +35,13 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
                      window: int | None = None, block_size: int = 512,
                      scale: float | None = None) -> jax.Array:
     """q: [B, Hq, D]; k_cache/v_cache: [B, S, Hkv, D]; lengths: [B] int32.
-    Returns [B, Hq, D]. Hq must be a multiple of Hkv (GQA groups)."""
+    Returns [B, Hq, D]. Hq must be a multiple of Hkv (GQA groups).
+
+    The blockwise path's KV loop is length-adaptive (see
+    ``swiftkv_decode_blockwise``): under the vmap below each batch row runs
+    ``cdiv(length, block)`` block steps, so a big preallocated cache costs
+    attention work proportional to the longest *active* sequence — not to
+    ``S`` — on every decode tick."""
     b, hq, d = q.shape
     hkv = k_cache.shape[2]
     assert hq % hkv == 0, (hq, hkv)

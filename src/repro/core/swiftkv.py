@@ -170,9 +170,17 @@ def swiftkv_decode_blockwise(q: jax.Array, k: jax.Array, v: jax.Array,
     Pallas kernel mirrors). q: [D]; k, v: [S, D].
 
     ``window``: sliding-window attention — only the last ``window`` cache
-    entries attend (h2o-danube / hymba SWA); the scan still touches each block
+    entries attend (h2o-danube / hymba SWA); in-range blocks are touched
     once, with fully-out-of-window blocks contributing zero.
-    """
+
+    The loop trip count is **length-adaptive**: blocks past the valid
+    prefix are exact state no-ops (every lane masked), so the loop runs
+    ``cdiv(length, block_size)`` iterations — a traced bound that lowers to
+    a ``while_loop``; under the ``decode_attention`` vmap the batch runs to
+    the longest *active* row's count, so decode attention work scales with
+    actual occupancy, not the cache allocation. The static single-block
+    case stays straight-line HLO (the dry-run cost pass sets
+    ``block_size = seq_len`` precisely so the loop disappears)."""
     d = q.shape[-1]
     s_cache = k.shape[0]
     scale = (1.0 / jnp.sqrt(d)) if scale is None else scale
@@ -195,7 +203,13 @@ def swiftkv_decode_blockwise(q: jax.Array, k: jax.Array, v: jax.Array,
         s_blk = (k_blk @ qf) * scale  # [Bk]
         return state_update_block(state, s_blk, v_blk, valid.astype(jnp.float32))
 
-    state = jax.lax.fori_loop(0, n_blocks, body, state_init(v.shape[-1]))
+    init = state_init(v.shape[-1])
+    if n_blocks == 1:
+        state = body(0, init)
+    else:
+        n_live = jnp.minimum(n_blocks,
+                             (length + block_size - 1) // block_size)
+        state = jax.lax.fori_loop(0, n_live, body, init)
     return state_finalize(state).astype(q.dtype)
 
 

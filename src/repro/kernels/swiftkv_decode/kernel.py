@@ -79,8 +79,10 @@ def _kernel(lengths_ref,                     # scalar prefetch [B] int32
     @pl.when(i * block_k < length)           # blocks past the prefix: no math
     def _update():
         q = q_ref[0, 0].astype(jnp.float32)              # [G, D]
-        k = k_ref[0, 0].astype(jnp.float32)              # [block_k, D]
-        v = v_ref[0, 0].astype(jnp.float32)              # [block_k, D]
+        # KV tiles arrive in the cache-native [B, S, Hkv, D] layout —
+        # (1, block_k, 1, D) blocks, no host-side swapaxes/pad copy
+        k = jnp.squeeze(k_ref[...], axis=(0, 2)).astype(jnp.float32)
+        v = jnp.squeeze(v_ref[...], axis=(0, 2)).astype(jnp.float32)
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32) * scale
         pos = i * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
@@ -112,10 +114,14 @@ def swiftkv_decode_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
                           window: int | None = None, scale: float,
                           exp_mode: str = "native",
                           interpret: bool = False) -> jax.Array:
-    """q: [B, Hkv, G, D]; k, v: [B, Hkv, S, D] (S multiple of block_k);
-    lengths: [B] int32. Returns [B, Hkv, G, D] in q.dtype."""
+    """q: [B, Hkv, G, D]; k, v: [B, S, Hkv, D] — the **cache-native**
+    layout, consumed directly through the BlockSpec index maps (S a
+    multiple of block_k); lengths: [B] int32. Returns [B, Hkv, G, D] in
+    q.dtype. Feeding the cache layout straight to the grid is what lets the
+    ops wrapper stop paying a whole-cache swapaxes+pad copy per layer per
+    decode step."""
     bsz, hkv, g, d = q.shape
-    s_len = k.shape[2]
+    s_len = k.shape[1]
     assert s_len % block_k == 0, (s_len, block_k)
     n_blocks = s_len // block_k
 
@@ -125,12 +131,12 @@ def swiftkv_decode_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
     def kv_map(b, h, i, lens):
         # clamp fetches past the valid prefix: no wasted HBM traffic
         last = jnp.maximum(pl.cdiv(lens[b], block_k) - 1, 0)
-        return (b, h, jnp.minimum(i, last), 0)
+        return (b, jnp.minimum(i, last), h, 0)
 
     in_specs = [
         pl.BlockSpec((1, 1, g, d), q_map),
-        pl.BlockSpec((1, 1, block_k, d), kv_map),
-        pl.BlockSpec((1, 1, block_k, d), kv_map),
+        pl.BlockSpec((1, block_k, 1, d), kv_map),
+        pl.BlockSpec((1, block_k, 1, d), kv_map),
     ]
     operands = [q, k, v]
     if exp_mode == "lut":

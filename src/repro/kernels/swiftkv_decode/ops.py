@@ -1,7 +1,13 @@
 """Public jit'd wrapper for the SwiftKV decode kernel.
 
-Handles GQA grouping, cache layout, sequence padding, and CPU fallback
-(interpret mode) so models can call one function everywhere.
+Handles GQA grouping, block-size selection, and CPU fallback (interpret
+mode) so models can call one function everywhere. KV caches flow through in
+their native ``[B, S, Hkv, D]`` layout — the kernel's BlockSpec index maps
+tile that layout directly, so there is **no** per-call ``swapaxes`` /
+``pad`` (the old wrapper copied the entire cache per layer per decode
+step). The flip side of zero-copy is an alignment contract: the cache's
+``max_len`` must be divisible by a usable block size at *init* time —
+misaligned caches raise instead of silently paying the copy back.
 """
 from __future__ import annotations
 
@@ -27,7 +33,13 @@ def swiftkv_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     """SwiftKV single-pass decode attention (Pallas).
 
     q: [B, Hq, D]; k_cache/v_cache: [B, S, Hkv, D]; lengths: [B] int32.
-    Returns [B, Hq, D].
+    Returns [B, Hq, D]. An exactly-dividing, sublane-aligned (multiple of
+    8) ``block_k`` request is honored as-is; a non-dividing request snaps
+    down to the largest power-of-two divisor of S, but never silently to a
+    degenerate one — a snapped block below 128, or any block that leaves S
+    misaligned, raises: allocate the cache block-aligned at ``init_cache``
+    instead of paying a pad+copy (or an unaligned whole-cache stream) per
+    layer per decode step.
     """
     b, hq, d = q.shape
     s_len, hkv = k_cache.shape[1], k_cache.shape[2]
@@ -36,16 +48,23 @@ def swiftkv_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     scale = float(1.0 / (d ** 0.5)) if scale is None else scale
     interpret = _auto_interpret() if interpret is None else interpret
 
-    block_k = min(block_k, max(128, 1 << (s_len - 1).bit_length()))
-    pad = (-s_len) % block_k
-    if pad:
-        k_cache = jnp.pad(k_cache, ((0, 0), (0, pad), (0, 0), (0, 0)))
-        v_cache = jnp.pad(v_cache, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    bk = min(block_k, s_len)
+    requested = bk
+    if s_len % bk:
+        # any power of two at or below (S & -S) divides S exactly
+        bk = min(1 << (bk.bit_length() - 1), s_len & -s_len)
+    if s_len % bk or bk % 8 or (bk < 128 and bk != requested):
+        raise ValueError(
+            f"swiftkv_decode: cache length {s_len} has no usable block for "
+            f"block_k={block_k} (best candidate {bk}) — allocate the KV "
+            "cache with a block-aligned max_len at init_cache (a multiple "
+            "of 128) instead of paying a whole-cache pad+copy, or an "
+            "unaligned whole-cache stream, per layer per decode step")
+    block_k = bk
 
     qg = q.reshape(b, hkv, g, d)
-    kc = jnp.swapaxes(k_cache, 1, 2)   # [B, Hkv, S, D]
-    vc = jnp.swapaxes(v_cache, 1, 2)
-    out = swiftkv_decode_pallas(qg, kc, vc, lengths.astype(jnp.int32),
+    out = swiftkv_decode_pallas(qg, k_cache, v_cache,
+                                lengths.astype(jnp.int32),
                                 block_k=block_k, window=window, scale=scale,
                                 exp_mode=exp_mode, interpret=interpret)
     return out.reshape(b, hq, d)

@@ -7,8 +7,10 @@ Two modes over host devices (reduced configs) or a production mesh:
   the dry-run lowers for the ``decode_*`` shape cells.
 * **continuous** (``--continuous``) — the ragged continuous-batching
   subsystem (``repro.serving.continuous``): KV slot pool + request
-  scheduler + chunked slot prefill, driven by a Poisson or file trace, with
-  per-request TTFT / inter-token latency and slot-occupancy metrics.
+  scheduler + chunked slot prefill + multi-tick decode blocks
+  (``--decode-ticks``), driven by a Poisson or file trace, with per-request
+  TTFT / inter-token latency, slot-occupancy, and dispatch-accounting
+  metrics.
   Covers the dense-KV, recurrent-state (ssm / hybrid: rwkv6-3b,
   hymba-1.5b), and MoE (olmoe-1b-7b, llama4-scout) families; only
   cross-attention stacks (vlm / audio) and ring-KV configs stay lock-step.
@@ -61,6 +63,12 @@ def main(argv=None):
                     help="continuous: trace length")
     ap.add_argument("--chunk", type=int, default=16,
                     help="continuous: prefill chunk size")
+    ap.add_argument("--decode-ticks", type=int, default=1,
+                    help="continuous: fused decode ticks per dispatch (K) — "
+                         "the host syncs once per K tokens; on-device "
+                         "EOS/budget retirement keeps outputs exact at any "
+                         "K, the adaptive horizon drops to 1 while prefill "
+                         "chunks are waiting")
     ap.add_argument("--rate", type=float, default=None,
                     help="continuous: Poisson arrival rate req/s "
                          "(default: backlogged)")
@@ -139,7 +147,8 @@ def _run_continuous(args, cfg, model, params, mesh):
         eng = ContinuousBatchingEngine(
             model, params, n_slots=n_slots, max_len=max_len,
             chunk=args.chunk, eos_id=args.eos_id,
-            temperature=args.temperature, seed=args.seed)
+            temperature=args.temperature, seed=args.seed,
+            decode_ticks=args.decode_ticks)
         eng.warmup()
         report = eng.run(trace)
 

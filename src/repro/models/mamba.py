@@ -131,9 +131,17 @@ def mamba_init_state(params: dict, batch: int) -> MambaState:
                       ssm=jnp.zeros((batch, d_inner, n), jnp.float32))
 
 
-def mamba_decode_step(params: dict, x_t: jax.Array,
-                      state: MambaState) -> tuple[jax.Array, MambaState]:
-    """x_t: [B, d_model] one token -> ([B, d_model], new state)."""
+def mamba_decode_step(params: dict, x_t: jax.Array, state: MambaState,
+                      active: jax.Array | None = None
+                      ) -> tuple[jax.Array, MambaState]:
+    """x_t: [B, d_model] one token -> ([B, d_model], new state).
+
+    ``active``: optional [B] bool ragged-batch mask — inactive rows carry
+    their (conv, ssm) state through unchanged (there is no "parking row"
+    for a recurrent state: the row itself *is* the state). Masking here,
+    at the state-update site, is what lets multi-tick decode
+    (``TransformerLM.decode_multi``) flip a row inactive mid-scan without
+    corrupting the state it hands to the slot's next occupant check."""
     dt_x = x_t.dtype
     xz = x_t @ params["in_proj"].astype(dt_x)
     xi, z = jnp.split(xz, 2, axis=-1)                         # [B, d_inner]
@@ -152,4 +160,10 @@ def mamba_decode_step(params: dict, x_t: jax.Array,
         bvec.astype(jnp.float32), cvec.astype(jnp.float32))
     y = y.astype(dt_x) + u * params["d_skip"].astype(dt_x)
     y = y * jax.nn.silu(z)
-    return y @ params["out_proj"].astype(dt_x), MambaState(conv=window[:, 1:], ssm=h)
+    conv_new, ssm_new = window[:, 1:], h
+    if active is not None:
+        m3 = active[:, None, None]
+        conv_new = jnp.where(m3, conv_new, state.conv)
+        ssm_new = jnp.where(m3, ssm_new, state.ssm)
+    return y @ params["out_proj"].astype(dt_x), MambaState(conv=conv_new,
+                                                           ssm=ssm_new)

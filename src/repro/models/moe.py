@@ -199,8 +199,11 @@ def moe_apply_rowwise(p: dict, x: jax.Array, *, top_k: int, act: str = "silu",
     a [T, k]-batched einsum — no expert queue, no capacity, and therefore no
     cross-row coupling: a row's output depends only on that row. That is the
     property ragged continuous batching needs (per-request equivalence must
-    hold while slot membership changes every step), and at decode batch
-    sizes (T = n_slots) the gather of k·(2-3)·d·d_ff weights is cheaper than
+    hold while slot membership changes every step — and, under multi-tick
+    decode (``TransformerLM.decode_multi``), while rows retire *mid-scan*:
+    a parked row's garbage routing can't steal capacity from live rows
+    because there is no capacity to steal), and at decode batch sizes
+    (T = n_slots) the gather of k·(2-3)·d·d_ff weights is cheaper than
     materializing the [E, C, d] queue buffer. The math matches the capacity
     path exactly whenever that path drops nothing."""
     t, d = x.shape

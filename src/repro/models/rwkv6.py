@@ -153,8 +153,14 @@ def rwkv_channel_mix(p: dict, x: jax.Array, state: RWKVLayerState,
 
 
 def rwkv_time_mix_step(p: dict, x_t: jax.Array, state: RWKVLayerState,
-                       head_dim: int) -> tuple[jax.Array, RWKVLayerState]:
-    """Decode: x_t [B, d] one token, O(1) state update."""
+                       head_dim: int, active: jax.Array | None = None
+                       ) -> tuple[jax.Array, RWKVLayerState]:
+    """Decode: x_t [B, d] one token, O(1) state update.
+
+    ``active``: optional [B] bool ragged-batch mask — inactive rows are
+    exact state no-ops (their x_prev / wkv carry through unchanged), the
+    invariant multi-tick decode (``TransformerLM.decode_multi``) relies on
+    when a row retires mid-scan."""
     b, d = x_t.shape
     dt = x_t.dtype
     h = d // head_dim
@@ -173,11 +179,19 @@ def rwkv_time_mix_step(p: dict, x_t: jax.Array, state: RWKVLayerState,
                                                 (b, h, head_dim)))
     y = y.reshape(b, d).astype(dt)
     y = rms_norm(y, p["ln_x"]) * g
-    return y @ p["wo"].astype(dt), state._replace(x_prev_att=x_t, wkv=s_new)
+    att_new, wkv_new = x_t, s_new
+    if active is not None:
+        att_new = jnp.where(active[:, None], att_new, state.x_prev_att)
+        wkv_new = jnp.where(active[:, None, None, None], wkv_new, state.wkv)
+    return y @ p["wo"].astype(dt), state._replace(x_prev_att=att_new,
+                                                  wkv=wkv_new)
 
 
-def rwkv_channel_mix_step(p: dict, x_t: jax.Array,
-                          state: RWKVLayerState) -> tuple[jax.Array, RWKVLayerState]:
+def rwkv_channel_mix_step(p: dict, x_t: jax.Array, state: RWKVLayerState,
+                          active: jax.Array | None = None
+                          ) -> tuple[jax.Array, RWKVLayerState]:
+    """``active``: see :func:`rwkv_time_mix_step` — inactive rows keep their
+    x_prev_ffn carry unchanged."""
     dt = x_t.dtype
     mix = p["mix_ffn"].astype(dt)
     xp = state.x_prev_ffn
@@ -185,4 +199,6 @@ def rwkv_channel_mix_step(p: dict, x_t: jax.Array,
     xr = x_t * mix[1] + xp * (1 - mix[1])
     k = jnp.square(jax.nn.relu(xk @ p["fk"].astype(dt)))
     out = jax.nn.sigmoid(xr @ p["fr"].astype(dt)) * (k @ p["fv"].astype(dt))
-    return out, state._replace(x_prev_ffn=x_t)
+    ffn_new = (x_t if active is None
+               else jnp.where(active[:, None], x_t, state.x_prev_ffn))
+    return out, state._replace(x_prev_ffn=ffn_new)

@@ -32,6 +32,21 @@ Params = dict[str, Any]
 Cache = dict[str, Any]
 
 
+def seeded_gumbel_pick(rng_key: jax.Array, logits: jax.Array,
+                       serial: jax.Array, token_idx: jax.Array,
+                       temperature: float) -> jax.Array:
+    """One exact softmax(logits/temperature) draw as Gumbel-max, keyed on
+    ``(rng_key, serial, token_idx)`` — request-intrinsic, so the draw for a
+    request's token i cannot depend on batch composition, scheduling, or
+    the decode tick horizon. The single definition is shared by the fused
+    multi-tick decode (:meth:`TransformerLM.decode_multi`, tokens 1..n) and
+    the serving engine's prefill first-token pick (token 0): both sides of
+    a request's stream MUST come from this one key derivation."""
+    key = jax.random.fold_in(jax.random.fold_in(rng_key, serial), token_idx)
+    g = jax.random.gumbel(key, logits.shape, logits.dtype)
+    return jnp.argmax(logits / temperature + g).astype(jnp.int32)
+
+
 def make_remat(cfg: ModelConfig):
     """Layer-boundary rematerialization with a configurable policy:
     'full' recomputes everything (min memory), 'dots' saves matmul outputs
@@ -396,6 +411,16 @@ class TransformerLM:
             # ring cache: ~window slots regardless of context (SWA archs);
             # +128 rounding keeps the lane dimension aligned
             kv_len = min(max_len, -(-(cfg.window + 1) // 128) * 128)
+        if cfg.decode_impl == "kernel":
+            # kernel-path alignment contract (kernels/swiftkv_decode/ops.py):
+            # the cache streams zero-copy through BlockSpec index maps, so
+            # max_len must be block-divisible at init — a 128 multiple always
+            # admits a power-of-two block, and a small cache (<= 128, one
+            # block) needs only sublane alignment (multiple of 8); a
+            # misaligned cache would raise at the first decode step instead
+            # of silently paying a per-step whole-cache pad+copy
+            mult = 128 if kv_len > 128 else 8
+            kv_len = -(-kv_len // mult) * mult
         cache["k"] = jnp.zeros((n_self, batch, kv_len, cfg.n_kv_heads, dh), dt)
         cache["v"] = jnp.zeros_like(cache["k"])
         if cfg.rotary_dim:
@@ -527,17 +552,11 @@ class TransformerLM:
         if cfg.family == "hybrid":
             st = mamba_lib.MambaState(conv=slices["mamba_conv"],
                                       ssm=slices["mamba_ssm"])
-            m_out, st = mamba_lib.mamba_decode_step(bp["mamba"], h, st)
-            if active is None:
-                new["mamba_conv"], new["mamba_ssm"] = st.conv, st.ssm
-            else:
-                # ragged batch: inactive rows carry their recurrent state
-                # through unchanged (there is no "parking row" for a
-                # recurrent state — the row itself is the state)
-                m3 = active[:, None, None]
-                new["mamba_conv"] = jnp.where(m3, st.conv,
-                                              slices["mamba_conv"])
-                new["mamba_ssm"] = jnp.where(m3, st.ssm, slices["mamba_ssm"])
+            # ragged batch: inactive rows carry their recurrent state through
+            # unchanged — masked at the state-update site in mamba.py
+            m_out, st = mamba_lib.mamba_decode_step(bp["mamba"], h, st,
+                                                    active=active)
+            new["mamba_conv"], new["mamba_ssm"] = st.conv, st.ssm
             x = x + 0.5 * (rms_norm(attn_out, bp["ln_attn_out"], cfg.norm_eps)
                            + rms_norm(m_out, bp["ln_mamba_out"], cfg.norm_eps))
         else:
@@ -639,6 +658,70 @@ class TransformerLM:
         cache = self._advance_rope(cache)
         x = rms_norm(x, params["ln_f"], cfg.norm_eps)
         return self._unembed(params, x), cache
+
+    # ---- multi-tick decode: K fused ticks, one dispatch --------------------
+    def decode_multi(self, params: Params, tok: jax.Array, cache: Cache,
+                     active: jax.Array, budget: jax.Array,
+                     serials: jax.Array, emitted: jax.Array, n_ticks: int,
+                     *, eos_id: int | None = None, temperature: float = 0.0,
+                     rng_key: jax.Array | None = None
+                     ) -> tuple[jax.Array, jax.Array, jax.Array, Cache]:
+        """Fuse ``n_ticks`` ragged decode ticks into one program: a
+        ``lax.scan`` over the :meth:`decode_step` body with per-tick
+        Gumbel-max sampling and **on-device retirement**, so the host syncs
+        once per K tokens instead of once per token.
+
+        Control state is device-resident for the whole block: per tick, an
+        active row decodes, samples its next token (greedy argmax when
+        ``temperature == 0``, else Gumbel-max keyed on
+        ``(rng_key, serial, token index)`` — request-intrinsic, so draws are
+        tick-horizon-independent by construction), advances its ``emitted``
+        counter, and *retires itself mid-scan* when the sampled token hits
+        ``eos_id`` or the counter reaches its ``budget`` — the row's
+        ``active`` bit flips and from the next tick it parks its KV writes /
+        carries its recurrent state exactly like any other inactive row.
+        Works unchanged for every ragged family because the scanned body IS
+        ``decode_step(active=...)``: MHA/GQA/SWA park KV on the reserved
+        tail row, ssm/hybrid rows mask their state carries
+        (rwkv6.rwkv_*_step / mamba.mamba_decode_step ``active=``), and MoE
+        rows use the capacity-free per-row dispatch, so a row's tokens
+        cannot depend on when its neighbours retire inside the block.
+
+        tok/serials/emitted: [B] int32; active: [B] bool; budget: [B] int32
+        (per-slot total token allowance, i.e. ``max_new_tokens``).
+        Returns ``(tok_block [K, B] int32, active [B], emitted [B], cache)``
+        where ``tok_block[t, b]`` is the token row ``b`` emitted at tick
+        ``t``, or ``-1`` if the row was inactive — the host replays
+        retirement from the block alone, no per-tick sync."""
+        if rng_key is None:
+            rng_key = jax.random.PRNGKey(0)
+
+        def pick_tokens(logits, emitted):
+            if temperature == 0.0:
+                return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return jax.vmap(
+                lambda row, serial, idx: seeded_gumbel_pick(
+                    rng_key, row, serial, idx, temperature)
+            )(logits, serials, emitted)
+
+        def tick(carry, _):
+            tok, cache, active, emitted = carry
+            logits, cache = self.decode_step(params, tok, cache, active)
+            pick = pick_tokens(logits, emitted)
+            emitted = jnp.where(active, emitted + 1, emitted)
+            done = emitted >= budget
+            if eos_id is not None:
+                done |= pick == eos_id
+            out = jnp.where(active, pick, jnp.int32(-1))
+            active = active & ~done
+            # a retired row's final token is emitted but never fed back —
+            # exactly the single-tick engine's contract
+            tok = jnp.where(active, pick, tok)
+            return (tok, cache, active, emitted), out
+
+        (tok, cache, active, emitted), tok_block = jax.lax.scan(
+            tick, (tok, cache, active, emitted), None, length=n_ticks)
+        return tok_block, active, emitted, cache
 
     # ---- prefill: full-prompt forward that also fills the cache ------------
     def prefill(self, params: Params, tokens: jax.Array, cache: Cache,
@@ -968,6 +1051,44 @@ class TransformerLM:
         x_last = rms_norm(x_last, params["ln_f"], cfg.norm_eps)
         return self._unembed(params, x_last)[0], cache
 
+    def prefill_chunks_batched(self, params: Params, tokens: jax.Array,
+                               cache: Cache, slots: jax.Array,
+                               offsets: jax.Array, lasts: jax.Array,
+                               valid: jax.Array) -> tuple[jax.Array, Cache]:
+        """Advance N mid-prefill slots one prompt chunk each in a *single*
+        dispatch: a ``lax.scan`` over rows, each applying the
+        :meth:`prefill_chunk` body for its own (slot, offset). Slots write
+        disjoint cache rows / state entries, so the sequential in-program
+        application is exactly equivalent to N separate ``prefill_chunk``
+        calls — it just costs one host round-trip instead of N (the
+        continuous engine's per-step prefill loop was one dispatch *per
+        slot* before this). Rows with ``valid=False`` are skipped via
+        ``lax.cond`` (zero logits, cache untouched), so the program
+        compiles once at a fixed N = n_slots regardless of how many slots
+        are mid-prefill.
+
+        tokens: [N, C] int32; slots/offsets/lasts: [N] int32; valid: [N]
+        bool. Returns (logits [N, V] f32 — row i meaningful only on request
+        i's final chunk, matching prefill_chunk's contract — and the
+        updated cache)."""
+        vocab = self.cfg.vocab_size
+
+        def row(cache, xs):
+            toks, slot, off, last, ok = xs
+
+            def run(c):
+                return self.prefill_chunk(params, toks, c, slot, off, last)
+
+            def skip(c):
+                return jnp.zeros((vocab,), jnp.float32), c
+
+            logits, cache = jax.lax.cond(ok, run, skip, cache)
+            return cache, logits
+
+        cache, logits = jax.lax.scan(
+            row, cache, (tokens, slots, offsets, lasts, valid))
+        return logits, cache
+
     def finalize_slot(self, cache: Cache, slot: jax.Array,
                       length: jax.Array) -> Cache:
         """Commit a slot's chunked prefill: set its live length and reseed
@@ -1034,19 +1155,16 @@ class TransformerLM:
             st = rwkv_lib.RWKVLayerState(att_prev.astype(self._dt),
                                          ffn_prev.astype(self._dt), wkv)
             h = rms_norm(x, bp["ln1"], cfg.norm_eps)
+            # ragged batch: inactive rows are exact state no-ops — masked at
+            # the state-update site in rwkv6.py
             y, st = rwkv_lib.rwkv_time_mix_step(bp["mix"], h, st,
-                                                cfg.rwkv_head_dim)
+                                                cfg.rwkv_head_dim,
+                                                active=active)
             x = x + y
             h2 = rms_norm(x, bp["ln2"], cfg.norm_eps)
-            y2, st = rwkv_lib.rwkv_channel_mix_step(bp["mix"], h2, st)
-            att_new, ffn_new, wkv_new = st.x_prev_att, st.x_prev_ffn, st.wkv
-            if active is not None:
-                # ragged batch: inactive rows are exact state no-ops
-                m = active[:, None]
-                att_new = jnp.where(m, att_new, att_prev)
-                ffn_new = jnp.where(m, ffn_new, ffn_prev)
-                wkv_new = jnp.where(active[:, None, None, None], wkv_new, wkv)
-            return x + y2, (att_new, ffn_new, wkv_new)
+            y2, st = rwkv_lib.rwkv_channel_mix_step(bp["mix"], h2, st,
+                                                    active=active)
+            return x + y2, (st.x_prev_att, st.x_prev_ffn, st.wkv)
 
         x, (att, ffn, wkv) = layer_scan(
             step, x, (params["blocks"], cache["rwkv_att"], cache["rwkv_ffn"],

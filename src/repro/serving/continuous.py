@@ -1,37 +1,61 @@
 """Continuous-batching serving engine: slot pool -> scheduler -> ragged
-chunked prefill -> static-shape ragged decode.
+chunked prefill -> static-shape ragged decode, with **multi-tick decode
+blocks** — the per-token host round-trip collapsed into one dispatch per K
+tokens.
 
-The jit'd decode step always runs at ``[n_slots]`` batch shape; an ``active``
-mask carries which slots hold live requests. Each engine step:
+The jit'd decode program always runs at ``[n_slots]`` batch shape; an
+``active`` mask carries which slots hold live requests. Each engine step:
 
 1. **admit** — backfill free slots from the admission queue;
-2. **prefill** — every mid-prefill slot advances by one prompt chunk
-   (``TransformerLM.prefill_chunk``), so long prompts never stall in-flight
-   decodes for more than one chunk's latency; a request whose final chunk
-   lands is committed (``finalize_slot``), its first token sampled from the
-   chunk logits, and its slot joins the active set;
-3. **decode** — one ragged ``decode_step`` over all slots; per-slot EOS /
-   max-token retirement releases slots mid-flight (reset-on-release), which
-   the next step's admission immediately backfills.
+2. **prefill** — every mid-prefill slot advances by one prompt chunk in a
+   *single* batched dispatch (``TransformerLM.prefill_chunks_batched``), so
+   long prompts never stall in-flight decodes for more than one chunk's
+   latency and N prefilling slots cost one host round-trip, not N; a
+   request whose final chunk lands is committed (``finalize_slot``), its
+   first token sampled from the chunk logits, and its slot joins the active
+   set;
+3. **decode** — one ``decode_multi`` block of K ragged ticks
+   (``lax.scan`` over the decode step with fused sampling and *on-device
+   retirement*: per-slot EOS / budget counters flip a row's ``active`` bit
+   mid-scan, the freed row parking its writes exactly like any inactive
+   row), then one host sync consumes the ``[K, n_slots]`` token block
+   post-hoc — per-tick retirement bookkeeping replayed from the block,
+   slots released, freed slots backfilled at the next step's admission.
+
+The tick horizon adapts per dispatch::
+
+    K = min(decode_ticks, min remaining budget among active rows)
+    K = 1 while admissions or prefill chunks are waiting   # TTFT first
+    K floored to a power of two                            # bounded compiles
+
+so at most ``log2(decode_ticks) + 1`` decode programs ever compile and a
+freed or newly-prefilled slot joins the batch at the next tick, never K
+ticks late.
 
 Greedy outputs are token-for-token identical to per-request
-``ServingEngine.generate`` (tested in tests/test_serving_continuous.py):
+``ServingEngine.generate`` at every tick horizon (tested in
+tests/test_serving_continuous.py and tests/test_decode_multi.py): the
+scanned block body IS the single-tick ``decode_step(active=...)``, so
 chunked prefill reuses the same blockwise ``prefill_attention`` math,
 masked-out cache rows are exact no-ops in the (mu, Z, Y) recurrence,
-recurrent-state rows (ssm / hybrid) carry through masked decode steps
-unchanged, and MoE rows use the capacity-free per-row dispatch so batch
-composition can never perturb a request.
+recurrent-state rows (ssm / hybrid) carry through masked ticks unchanged,
+and MoE rows use the capacity-free per-row dispatch.
 
-Sampling (temperature > 0) is fused into the jit'd decode program as
-seeded per-slot Gumbel-max (``argmax(logits/T + g)`` with
-``g ~ Gumbel(0,1)`` is exactly a softmax(logits/T) draw), so the device ->
-host transfer is the same ``[n_slots]`` int32 on both greedy and sampled
-paths — never the ``[n_slots, V]`` logits. Keys derive from
-``(seed, request admission serial, token index)`` — properties of the
-*request*, not of the engine's step counters — so a request's sampled
-tokens are independent of batch composition and of how prefill chunks and
-decode ticks interleave: a fresh engine replays a (seed, trace) pair
-token-for-token even under timed Poisson arrivals.
+Sampling (temperature > 0) is fused into the jit'd block as seeded per-slot
+Gumbel-max (``argmax(logits/T + g)`` with ``g ~ Gumbel(0,1)`` is exactly a
+softmax(logits/T) draw). Keys derive from ``(seed, request admission
+serial, token index)`` — properties of the *request*, not of the engine's
+step counters or the tick horizon — so a request's sampled tokens are
+independent of batch composition, of how prefill chunks and decode blocks
+interleave, *and of K itself*: the same (seed, trace) replays
+token-for-token at decode_ticks 1, 4, or 8.
+
+Timestamps are **block-granular**: every token in a K-block is stamped when
+the block's sync completes, so per-token ITL percentiles quantize to
+~K-token blocks at decode_ticks > 1. ``itl_effective_ms`` (wall seconds per
+generated token) is the honest per-token latency figure; the report carries
+a note saying so. Dispatch accounting (``dispatches``, ``host_syncs``,
+``dispatches_per_token``) makes the round-trip collapse measurable.
 """
 from __future__ import annotations
 
@@ -41,6 +65,8 @@ import time
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.models.transformer import seeded_gumbel_pick
 
 from .scheduler import Request, RequestState, Scheduler
 from .slot_pool import KVSlotPool
@@ -58,7 +84,8 @@ def _pct(xs, q):
 class ContinuousBatchingEngine:
     def __init__(self, model, params, *, n_slots: int, max_len: int,
                  chunk: int = 16, eos_id: int | None = None,
-                 pad_id: int = 0, temperature: float = 0.0, seed: int = 0):
+                 pad_id: int = 0, temperature: float = 0.0, seed: int = 0,
+                 decode_ticks: int = 1):
         if not getattr(model, "supports_ragged_serving", lambda: False)():
             raise ValueError(
                 f"{model.cfg.name}: continuous batching needs a "
@@ -67,58 +94,64 @@ class ContinuousBatchingEngine:
         if chunk < 1 or max_len % chunk:
             raise ValueError(f"chunk ({chunk}) must divide max_len "
                              f"({max_len}) so padded chunks stay in range")
+        if decode_ticks < 1:
+            raise ValueError(f"decode_ticks must be >= 1, got {decode_ticks}")
         self.model, self.params = model, params
         self.chunk, self.eos_id, self.pad_id = chunk, eos_id, pad_id
         self.temperature = temperature
+        self.max_ticks = decode_ticks
         self._t0 = time.perf_counter()          # reset by run()
         self.pool = KVSlotPool(n_slots, max_len)
         self.sched = Scheduler(self.pool)
-        self._prefill_chunk = jax.jit(model.prefill_chunk,
-                                      donate_argnums=(2,))
+        self._prefill_batched = jax.jit(model.prefill_chunks_batched,
+                                        donate_argnums=(2,))
         self._finalize = jax.jit(model.finalize_slot, donate_argnums=(0,))
         self._release = jax.jit(model.release_slot, donate_argnums=(0,))
 
         # sampler keys: (seed, request admission serial, token index) —
-        # request-intrinsic, so a draw can't depend on batch composition or
-        # on how the scheduler interleaved prefill chunks with decode ticks
-        base_key = jax.random.PRNGKey(seed)
-
-        def _gumbel_pick(logits, serial, token_idx):
-            key = jax.random.fold_in(jax.random.fold_in(base_key, serial),
-                                     token_idx)
-            g = jax.random.gumbel(key, logits.shape, logits.dtype)
-            return jnp.argmax(logits / temperature + g,
-                              axis=-1).astype(jnp.int32)
-
-        def _decode_pick(params, tok, cache, active, serials, emitted):
-            # decode + sample in one dispatch: only [n_slots] int32 leaves
-            # the device on both greedy and sampled paths
-            logits, cache = model.decode_step(params, tok, cache, active)
-            if temperature == 0.0:
-                return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
-            return jax.vmap(_gumbel_pick)(logits, serials, emitted), cache
-        self._decode_pick = jax.jit(_decode_pick, donate_argnums=(2,))
+        # request-intrinsic, so a draw can't depend on batch composition,
+        # on how the scheduler interleaved prefill chunks with decode
+        # blocks, or on the tick horizon K
+        self._base_key = jax.random.PRNGKey(seed)
+        self._decode_fns: dict[int, object] = {}   # tick horizon K -> jit
 
         def _prefill_pick(logits_row, serial):
-            # first token off a finalized prefill: [V] -> scalar int32
+            # first token off a finalized prefill: [V] -> scalar int32.
+            # Token index 0 of the SAME (seed, serial, idx) key stream the
+            # fused decode draws tokens 1..n from (seeded_gumbel_pick is
+            # the single shared definition)
             if temperature == 0.0:
                 return jnp.argmax(logits_row).astype(jnp.int32)
-            return _gumbel_pick(logits_row, serial, jnp.int32(0))
+            return seeded_gumbel_pick(self._base_key, logits_row, serial,
+                                      jnp.int32(0), temperature)
         self._prefill_pick = jax.jit(_prefill_pick)
 
         self.cache = model.init_cache(n_slots, max_len)
         self.tok = np.full((n_slots,), pad_id, np.int32)
         self.active = np.zeros((n_slots,), bool)
-        # per-slot sampler state: admission serial of the occupying request
-        # and how many tokens it has emitted (its next draw's token index)
+        # per-slot sampler / retirement state, mirrored on device per block:
+        # admission serial of the occupying request, tokens emitted so far
+        # (the next draw's token index), and the request's total allowance
         self.serial = np.zeros((n_slots,), np.int32)
         self.emitted = np.zeros((n_slots,), np.int32)
+        self.budget = np.zeros((n_slots,), np.int32)
         self._serials: dict = {}        # rid -> serial, mid-prefill only
         self._serial_ctr = 0
-        # counters for occupancy / utilization reporting
-        self.decode_steps = 0
-        self.prefill_chunks = 0
+        # EWMA of per-tick wall time, measured off each block dispatch —
+        # used to cap the horizon so a block doesn't overshoot the next
+        # timed arrival when a free slot is waiting for it
+        self._tick_s = 0.0
+        self._zero_counters()
+
+    def _zero_counters(self) -> None:
+        # occupancy / utilization / dispatch-accounting counters
+        self.decode_steps = 0           # executed ticks with >=1 live row
+        self.decode_dispatches = 0      # decode block programs launched
+        self.prefill_chunks = 0         # chunk advances (rows, not launches)
+        self.prefill_dispatches = 0     # batched prefill programs launched
         self.active_row_steps = 0
+        self.dispatches = 0             # every jit'd program launch
+        self.host_syncs = 0             # blocking device -> host transfers
 
     # ---- intake -----------------------------------------------------------
     def submit(self, request: Request, now: float = 0.0) -> RequestState:
@@ -132,81 +165,176 @@ class ContinuousBatchingEngine:
 
     def warmup(self) -> "ContinuousBatchingEngine":
         """Compile the chunk / finalize / decode / release programs with a
-        throwaway multi-chunk request. ``run`` drops finished-traffic stats
-        at entry so reports cover real traffic only; the warmup request
-        consumes exactly one sampler serial, so two warmed-up engines with
-        the same seed still draw identical streams."""
-        p = max(1, min(self.chunk + 1, self.pool.capacity - 2))
-        self.run([Request(prompt=np.zeros(p, np.int32), max_new_tokens=2,
+        throwaway request whose budget (2*decode_ticks, prioritized over
+        prompt length when the pool is small) walks the adaptive horizon
+        down through every power-of-two K <= decode_ticks — on a pool too
+        small to ever reach the larger horizons, whatever residual K a real
+        trace *can* reach still compiles on its first use. ``run`` drops
+        finished-traffic stats at entry so reports cover real traffic only;
+        the warmup request consumes exactly one sampler serial, so two
+        warmed-up engines with the same seed still draw identical
+        streams."""
+        m_want = 2 * self.max_ticks     # walks K = max_ticks, ..., 2, 1
+        p = max(1, min(self.chunk + 1, self.pool.capacity - m_want))
+        m = max(2, min(m_want, self.pool.capacity - p))
+        self.run([Request(prompt=np.zeros(p, np.int32), max_new_tokens=m,
                           rid="__warmup__")])
         return self
 
+    # ---- decode program per tick horizon ----------------------------------
+    def _decode_fn(self, k: int):
+        """jit'd K-tick block. At most log2(max_ticks)+1 of these ever
+        compile (the horizon is floored to a power of two)."""
+        fn = self._decode_fns.get(k)
+        if fn is None:
+            model, eos, temp = self.model, self.eos_id, self.temperature
+            key = self._base_key
+
+            def block(params, tok, cache, active, budget, serials, emitted):
+                toks, _, _, cache = model.decode_multi(
+                    params, tok, cache, active, budget, serials, emitted, k,
+                    eos_id=eos, temperature=temp, rng_key=key)
+                return toks, cache
+            fn = jax.jit(block, donate_argnums=(2,))
+            self._decode_fns[k] = fn
+        return fn
+
+    def _tick_horizon(self, now: float | None = None,
+                      deadline: float | None = None) -> int:
+        """K = min(decode_ticks, min remaining budget among active rows),
+        forced to 1 while prefill chunks are waiting (a mid-prefill slot
+        must advance every tick and join the batch the tick its final chunk
+        lands — TTFT is not sacrificed to throughput), floored to a power
+        of two to bound the number of compiled programs.
+
+        A non-empty admission queue does *not* force K=1: ``admit()`` ran
+        at the top of this step, so queued requests mean every slot is
+        busy, and the min-remaining-budget cap already ends the block at
+        exactly the next scheduled (max-token) retirement — the freed slot
+        backfills at the following step, never K ticks late.
+
+        ``deadline``: engine-clock time of the next *timed arrival while a
+        slot sits free* (run() passes it) — the horizon is additionally
+        capped so the block ends by then (estimated via the per-tick EWMA),
+        keeping an arriving request's TTFT flat in K instead of paying up
+        to K-1 ticks of block drain before it can even submit. The one
+        residual trade: an unpredictable mid-block EOS costs up to K-1
+        parked ticks before its slot backfills."""
+        if self.max_ticks == 1 or self.sched.prefilling:
+            return 1
+        rem = min(s.remaining for s in self.sched.decoding.values())
+        k = max(1, min(self.max_ticks, rem))
+        if (deadline is not None and now is not None and self._tick_s > 0):
+            k = max(1, min(k, int((deadline - now) / self._tick_s)))
+        return 1 << (k.bit_length() - 1)
+
     # ---- one engine step --------------------------------------------------
-    def step(self, now: float | None = None) -> bool:
-        """Admit + advance every prefilling slot one chunk + one ragged
-        decode step. Returns False when nothing was left to do."""
+    def step(self, now: float | None = None,
+             deadline: float | None = None) -> bool:
+        """Admit + advance every prefilling slot one chunk (one batched
+        dispatch) + one K-tick decode block. ``deadline``: next timed
+        arrival while a slot is free (caps the horizon — see
+        ``_tick_horizon``). Returns False when nothing was left to do."""
         now = (time.perf_counter() - self._t0) if now is None else now
         self.sched.admit(now)
 
-        for state in list(self.sched.prefilling):
-            self._advance_prefill(state)
+        if self.sched.prefilling:
+            self._advance_prefills()
 
         if not self.active.any():
             return self.sched.pending()
 
-        tok, act = jnp.asarray(self.tok), jnp.asarray(self.active)
-        picks, self.cache = self._decode_pick(
-            self.params, tok, self.cache, act,
+        k = self._tick_horizon(now, deadline)
+        t_dispatch = time.perf_counter()
+        toks, self.cache = self._decode_fn(k)(
+            self.params, jnp.asarray(self.tok), self.cache,
+            jnp.asarray(self.active), jnp.asarray(self.budget),
             jnp.asarray(self.serial), jnp.asarray(self.emitted))
-        rows = np.asarray(picks)
-        self.decode_steps += 1
-        self.active_row_steps += int(self.active.sum())
-        for slot in np.flatnonzero(self.active):
-            state = self.sched.decoding[int(slot)]
-            self.pool.advance(int(slot))
-            self._emit(state, int(rows[slot]))
+        self.decode_dispatches += 1
+        self.dispatches += 1
+        rows = np.asarray(toks)                  # [K, n_slots]; the ONE sync
+        self.host_syncs += 1
+        # block-granularity stamp: every token in the block shares the
+        # post-sync clock (see itl_effective_ms in report())
+        now_blk = time.perf_counter() - self._t0
+        per_tick = (time.perf_counter() - t_dispatch) / k
+        self._tick_s = (per_tick if self._tick_s == 0.0
+                        else 0.5 * self._tick_s + 0.5 * per_tick)
+        for t in range(k):
+            live = rows[t] >= 0                  # -1 marks parked rows
+            if not live.any():
+                break                            # all rows retired mid-block
+            self.decode_steps += 1
+            self.active_row_steps += int(live.sum())
+            for slot in np.flatnonzero(live):
+                state = self.sched.decoding[int(slot)]
+                self.pool.advance(int(slot))
+                self._emit(state, int(rows[t, slot]), now_blk)
         return True
 
-    def _advance_prefill(self, state: RequestState) -> None:
-        prompt = state.request.prompt
-        off = state.prefilled
-        toks = prompt[off:off + self.chunk]
-        if toks.size < self.chunk:
-            toks = np.pad(toks, (0, self.chunk - toks.size),
-                          constant_values=self.pad_id)
-        last = min(self.chunk - 1, max(0, len(prompt) - 1 - off))
-        logits, self.cache = self._prefill_chunk(
-            self.params, jnp.asarray(toks), self.cache,
-            jnp.int32(state.slot), jnp.int32(off), jnp.int32(last))
-        self.prefill_chunks += 1
-        state.prefilled = min(off + self.chunk, len(prompt))
-        if state.prefilled < len(prompt):
-            return    # non-final chunk: logits row never fetched from device
-        # final chunk: commit the slot, sample the first token on device
-        # (a scalar int32 transfer, not the [V] logits row)
-        self.cache = self._finalize(self.cache, jnp.int32(state.slot),
-                                    len(prompt))
-        self.sched.start_decoding(state)
-        self.serial[state.slot] = self._serials.pop(state.rid)
-        self._emit(state, int(self._prefill_pick(
-            logits, jnp.int32(self.serial[state.slot]))))
+    def _advance_prefills(self) -> None:
+        """One batched dispatch advancing *all* mid-prefill slots one chunk
+        (``prefill_chunks_batched``); finalized requests sample their first
+        token from their chunk-logits row (a scalar int32 transfer, never
+        the [V] logits)."""
+        states = list(self.sched.prefilling)
+        n = self.pool.n_slots
+        toks = np.full((n, self.chunk), self.pad_id, np.int32)
+        slots = np.zeros((n,), np.int32)
+        offs = np.zeros((n,), np.int32)
+        lasts = np.zeros((n,), np.int32)
+        valid = np.zeros((n,), bool)
+        for i, st in enumerate(states):
+            prompt = st.request.prompt
+            off = st.prefilled
+            part = prompt[off:off + self.chunk]
+            toks[i, :part.size] = part
+            slots[i], offs[i] = st.slot, off
+            lasts[i] = min(self.chunk - 1, max(0, len(prompt) - 1 - off))
+            valid[i] = True
+        logits, self.cache = self._prefill_batched(
+            self.params, jnp.asarray(toks), self.cache, jnp.asarray(slots),
+            jnp.asarray(offs), jnp.asarray(lasts), jnp.asarray(valid))
+        self.prefill_dispatches += 1
+        self.dispatches += 1
+        self.prefill_chunks += len(states)
+        for i, st in enumerate(states):
+            prompt = st.request.prompt
+            st.prefilled = min(st.prefilled + self.chunk, len(prompt))
+            if st.prefilled < len(prompt):
+                continue   # non-final chunk: logits row never leaves device
+            # final chunk: commit the slot, sample the first token on device
+            self.cache = self._finalize(self.cache, jnp.int32(st.slot),
+                                        len(prompt))
+            self.dispatches += 1
+            self.sched.start_decoding(st)
+            self.serial[st.slot] = self._serials.pop(st.rid)
+            self.budget[st.slot] = st.request.max_new_tokens
+            tok0 = int(self._prefill_pick(logits[i],
+                                          jnp.int32(self.serial[st.slot])))
+            self.dispatches += 1
+            self.host_syncs += 1
+            self._emit(st, tok0, time.perf_counter() - self._t0)
 
-    def _emit(self, state: RequestState, token: int) -> None:
-        # stamped here, after np.asarray blocked on the device work that
-        # produced the token — a step-entry clock would understate TTFT/ITL
-        # by up to one whole engine step
-        now = time.perf_counter() - self._t0
+    def _emit(self, state: RequestState, token: int, now: float) -> None:
+        # ``now`` is stamped after the sync that produced the token blocked
+        # on device work; within a decode block every token shares the
+        # block's completion stamp (block-granularity timestamps)
         state.tokens.append(token)
         state.token_times.append(now)
         if state.t_first is None:
             state.t_first = now
         done = (self.eos_id is not None and token == self.eos_id)
         if done or len(state.tokens) >= state.request.max_new_tokens:
+            # mirrors decode_multi's on-device retirement exactly: the
+            # device flipped this row's active bit at the same tick
             reason = "eos" if done else "max_tokens"
             slot = self.sched.retire(state, reason, now)
             self.cache = self._release(self.cache, jnp.int32(slot))
+            self.dispatches += 1
             self.active[slot] = False
             self.tok[slot] = self.pad_id
+            self.budget[slot] = 0
         else:
             self.active[state.slot] = True
             self.tok[state.slot] = token
@@ -223,14 +351,19 @@ class ContinuousBatchingEngine:
         # so drop finished-traffic history before timing starts
         self.sched.reset_stats()
         self.pool.reset_stats()
-        self.decode_steps = self.prefill_chunks = self.active_row_steps = 0
+        self._zero_counters()
         waiting = sorted(requests or [], key=lambda r: r.arrival)
         self._t0 = t0 = time.perf_counter()
         while True:
             now = time.perf_counter() - t0
             while waiting and waiting[0].arrival <= now:
                 self.submit(waiting.pop(0), now=now)
-            worked = self.step(now)
+            # a not-yet-due arrival with a free slot waiting for it caps the
+            # tick horizon (an arrival into a busy pool queues regardless,
+            # so it imposes no deadline)
+            deadline = (waiting[0].arrival
+                        if waiting and self.pool.n_free else None)
+            worked = self.step(now, deadline)
             if not worked and not waiting:
                 break
             if not worked and waiting:
@@ -245,6 +378,40 @@ class ContinuousBatchingEngine:
         gen = sum(len(s.tokens) for s in done)
         ttfts = sorted(s.ttft for s in done if s.ttft is not None)
         itls = sorted(x for s in done for x in s.itl_ms)
+        agg = {
+            "n_requests": self.sched.n_submitted,
+            "n_retired": self.sched.n_retired,
+            "n_rejected": len(self.sched.rejected),
+            "generated_tokens": gen,
+            "wall_s": round(wall_s, 3),
+            "tokens_per_s": round(gen / wall_s, 1) if wall_s else None,
+            "decode_ticks": self.max_ticks,
+            "decode_steps": self.decode_steps,
+            "decode_dispatches": self.decode_dispatches,
+            "prefill_chunks": self.prefill_chunks,
+            "prefill_dispatches": self.prefill_dispatches,
+            "dispatches": self.dispatches,
+            "host_syncs": self.host_syncs,
+            "dispatches_per_token": (round(self.dispatches / gen, 4)
+                                     if gen else None),
+            "mean_occupancy": round(
+                self.active_row_steps
+                / (self.decode_steps * self.pool.n_slots), 3)
+                if self.decode_steps else 0.0,
+            "ttft_p50_s": _pct(ttfts, 0.50),
+            "ttft_p95_s": _pct(ttfts, 0.95),
+            "itl_p50_ms": _pct(itls, 0.50),
+            "itl_p95_ms": _pct(itls, 0.95),
+            "itl_effective_ms": (round(1e3 * wall_s / gen, 4)
+                                 if gen else None),
+        }
+        if self.max_ticks > 1:
+            agg["itl_note"] = (
+                "decode_ticks > 1: token timestamps are block-granular, so "
+                "itl percentiles quantize to ~K-token blocks (intra-block "
+                "gaps read as 0, block boundaries as K tokens' worth); "
+                "itl_effective_ms = wall_s / generated_tokens is the honest "
+                "per-token latency figure")
         return {
             "requests": [{
                 "rid": s.rid, "prompt_len": int(len(s.request.prompt)),
@@ -252,22 +419,5 @@ class ContinuousBatchingEngine:
                 "ttft_s": None if s.ttft is None else round(s.ttft, 4),
                 "finish_reason": s.finish_reason,
             } for s in done + self.sched.rejected],
-            "aggregate": {
-                "n_requests": self.sched.n_submitted,
-                "n_retired": self.sched.n_retired,
-                "n_rejected": len(self.sched.rejected),
-                "generated_tokens": gen,
-                "wall_s": round(wall_s, 3),
-                "tokens_per_s": round(gen / wall_s, 1) if wall_s else None,
-                "decode_steps": self.decode_steps,
-                "prefill_chunks": self.prefill_chunks,
-                "mean_occupancy": round(
-                    self.active_row_steps
-                    / (self.decode_steps * self.pool.n_slots), 3)
-                    if self.decode_steps else 0.0,
-                "ttft_p50_s": _pct(ttfts, 0.50),
-                "ttft_p95_s": _pct(ttfts, 0.95),
-                "itl_p50_ms": _pct(itls, 0.50),
-                "itl_p95_ms": _pct(itls, 0.95),
-            },
+            "aggregate": agg,
         }

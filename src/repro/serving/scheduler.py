@@ -80,6 +80,14 @@ class RequestState:
         return None if self.t_first is None else self.t_first - self.t_submit
 
     @property
+    def remaining(self) -> int:
+        """Tokens still owed under the request's budget — the adaptive
+        decode tick horizon is capped by the min of this over active rows
+        (a row's on-device budget counter retires it at exactly this many
+        more ticks, so any further fused ticks would run fully parked)."""
+        return self.request.max_new_tokens - len(self.tokens)
+
+    @property
     def itl_ms(self) -> list:
         ts = self.token_times
         return [1e3 * (b - a) for a, b in zip(ts, ts[1:])]

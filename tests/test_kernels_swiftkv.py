@@ -77,9 +77,28 @@ def test_kernel_length_edge_cases():
         np.testing.assert_allclose(got, want, atol=2e-5)
 
 
-def test_kernel_unpadded_seq():
-    """S not a block multiple: ops pads and masks."""
-    q, k, v, lengths = mk(2, 4, 2, 300, 64, jnp.float32)
-    got = ops.swiftkv_decode(q, k, v, lengths, block_k=128, interpret=True)
+def test_kernel_block_k_snaps_to_divisor():
+    """A non-dividing block_k request snaps down to the largest power-of-two
+    divisor of S (640 = 5*128: 512 -> 128) — the cache still streams
+    zero-copy in its native layout."""
+    q, k, v, lengths = mk(2, 4, 2, 640, 64, jnp.float32)
+    got = ops.swiftkv_decode(q, k, v, lengths, block_k=512, interpret=True)
     want = ref.swiftkv_decode_ref(q, k, v, lengths)
     np.testing.assert_allclose(got, want, atol=2e-5)
+
+
+def test_kernel_small_cache_runs_unpadded():
+    """S below one lane tile (64) uses block_k = S — no call-time pad."""
+    q, k, v, lengths = mk(2, 4, 2, 64, 64, jnp.float32)
+    got = ops.swiftkv_decode(q, k, v, lengths, block_k=512, interpret=True)
+    want = ref.swiftkv_decode_ref(q, k, v, lengths)
+    np.testing.assert_allclose(got, want, atol=2e-5)
+
+
+def test_kernel_misaligned_cache_raises():
+    """The zero-copy contract: a cache whose max_len admits no usable block
+    size raises at trace time (allocate block-aligned at init_cache) instead
+    of silently paying a whole-cache pad+copy per layer per decode step."""
+    q, k, v, lengths = mk(2, 4, 2, 300, 64, jnp.float32)
+    with pytest.raises(ValueError, match="block-aligned"):
+        ops.swiftkv_decode(q, k, v, lengths, block_k=128, interpret=True)
