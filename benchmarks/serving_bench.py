@@ -13,7 +13,10 @@ through both engines and compares useful-token throughput:
   retirement — the host syncs once per K tokens; see
   ``repro.serving.continuous``). The JSON carries the engine's dispatch
   accounting (``dispatches_per_token``, ``host_syncs``) so the round-trip
-  collapse is measurable, not just inferable from wall clock.
+  collapse is measurable, not just inferable from wall clock, plus the
+  ``kv_bytes_per_slot`` / ``kv_rows_per_slot`` memory line — the O(window)
+  win of ring-KV archs (``--arch <swa-arch>+ring``, e.g.
+  ``h2o-danube-1.8b+ring``) is a reported number.
 
 Both engines run the same jit'd model; tokens are counted as each request's
 ``max_new_tokens`` (useful tokens only — lock-step's over-generated padding
@@ -213,6 +216,11 @@ def run_arch(arch: str, args) -> tuple[dict, int]:
           f"ttft p50 {cont['ttft_p50_s']}s, decode_ticks "
           f"{args.decode_ticks}, {cont['dispatches_per_token']} "
           f"dispatches/token, {cont['host_syncs']} host syncs)")
+    # the O(window) accounting line: ring archs hold kv_rows_per_slot ==
+    # ring_len << max_len live KV rows per slot
+    print(f"  kv cache:   {cont['kv_bytes_per_slot']} B/slot "
+          f"({cont['kv_rows_per_slot']} rows/slot, max_len "
+          f"{cont['max_len']})")
 
     speedup = round(cont["tokens_per_s"] / lock["tokens_per_s"], 3)
     status = "PASS" if speedup >= SPEEDUP_TARGET else "MISS"

@@ -34,6 +34,13 @@ _ALIAS = {
 
 
 def get_config(name: str, reduced: bool = False) -> ModelConfig:
+    if name.endswith("+ring"):
+        # ring-KV variant of an SWA arch: O(window) per-slot caches
+        # (serving_bench --arch h2o-danube-1.8b+ring, conformance tests)
+        base = get_config(name[: -len("+ring")], reduced)
+        if not base.window:
+            raise ValueError(f"{name}: kv_ring needs a sliding-window arch")
+        return base.replace(kv_ring=True, name=base.name + "+ring")
     mod_name = _ALIAS.get(name, name.replace("-", "_").replace(".", "p"))
     mod = importlib.import_module(f"repro.configs.{mod_name}")
     return mod.REDUCED if reduced else mod.CONFIG

@@ -32,10 +32,19 @@ DecodeImpl = Literal["tokenwise", "blockwise", "kernel", "naive", "sp"]
 
 def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
                      lengths: jax.Array, *, impl: DecodeImpl = "blockwise",
-                     window: int | None = None, block_size: int = 512,
+                     window: int | None = None, ring: bool = False,
+                     block_size: int = 512,
                      scale: float | None = None) -> jax.Array:
     """q: [B, Hq, D]; k_cache/v_cache: [B, S, Hkv, D]; lengths: [B] int32.
     Returns [B, Hq, D]. Hq must be a multiple of Hkv (GQA groups).
+
+    ``ring=True``: the cache is a ring of R = S slots (SWA configs —
+    ``window`` required); ``lengths`` counts tokens seen and may exceed S
+    once wrapped. The blockwise and kernel paths consume the ring *in
+    place* — per-slot absolute positions are recovered arithmetically, so
+    there is no unrotate copy and the single-pass exactly-once contract
+    holds on the wrapped layout. ``tokenwise`` / ``sp`` have no ring form
+    and fall back to blockwise; ``naive`` uses the dense ring oracle.
 
     The blockwise path's KV loop is length-adaptive (see
     ``swiftkv_decode_blockwise``): under the vmap below each batch row runs
@@ -46,6 +55,15 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     hkv = k_cache.shape[2]
     assert hq % hkv == 0, (hq, hkv)
     g = hq // hkv
+
+    if ring:
+        if window is None:
+            raise ValueError("ring caches are windowed: pass window")
+        if impl in ("sp", "tokenwise"):
+            impl = "blockwise"   # no seq-sharded / per-token ring form
+        if impl == "naive":
+            return decode_attention_ring(q, k_cache, v_cache, lengths,
+                                         window=window, scale=scale)
 
     if impl == "sp":
         # sequence-parallel monoid-merge decode: the KV cache stays
@@ -70,7 +88,8 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     if impl == "kernel":
         from repro.kernels.swiftkv_decode import ops as kops
         return kops.swiftkv_decode(q, k_cache, v_cache, lengths,
-                                   window=window, block_k=block_size, scale=scale)
+                                   window=window, ring=ring,
+                                   block_k=block_size, scale=scale)
 
     # group queries: [B, Hkv, G, D]; caches to [B, Hkv, S, D]
     qg = q.reshape(b, hkv, g, d)
@@ -83,7 +102,8 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
             raise NotImplementedError("tokenwise path: use blockwise for SWA")
     elif impl == "blockwise":
         fn = functools.partial(swiftkv.swiftkv_decode_blockwise, scale=scale,
-                               window=window, block_size=block_size)
+                               window=window, ring=ring,
+                               block_size=block_size)
     elif impl == "naive":
         fn = functools.partial(swiftkv.softmax_attention_reference, scale=scale,
                                window=window)
@@ -129,6 +149,48 @@ def decode_attention_ring(q: jax.Array, k_cache: jax.Array,
     pr = jnp.where(valid[:, None, None, :], pr, 0.0)
     out = jnp.einsum("bhgs,bshd->bhgd", pr, vc)
     return out.reshape(b, hq, d).astype(q.dtype)
+
+
+def prefill_attention_ring(q: jax.Array, k_ring: jax.Array, v_ring: jax.Array,
+                           q_positions: jax.Array, p_max: jax.Array, *,
+                           window: int, scale: float | None = None) -> jax.Array:
+    """Causal SWA attention of a prompt *chunk* over a RING KV cache.
+
+    q: [B, C, Hq, D] — chunk queries at absolute positions ``q_positions``
+    [C]; k/v_ring: [B, R, Hkv, D] ring caches that already contain this
+    chunk's keys (written at ``pos % R``) on top of the slot's history;
+    ``p_max``: the last *real* (non-padding) position written. Slot ``s``
+    holds absolute position ``p_max - ((p_max - s) mod R)``; a slot is
+    attended by query row ``c`` iff that position is in
+    ``(q_positions[c] - window, q_positions[c]]`` — which also masks (a)
+    slots a later in-chunk token overwrote (their lost position is provably
+    out of the earlier query's window when R >= window + C - 1, the
+    engine-enforced ring slack), (b) a previous occupant's stale slots
+    (their recovered position is negative until this request wraps), and
+    (c) padded tail rows (never written: ``keep``-masked by the caller).
+
+    C and R are both small (a prefill chunk against ~window ring slots), so
+    this materializes the [C, R] score block directly — the chunk analogue
+    of the dense ring decode oracle, not a streamed pass."""
+    b, c, hq, d = q.shape
+    r, hkv = k_ring.shape[1], k_ring.shape[2]
+    g = hq // hkv
+    scale = (1.0 / d ** 0.5) if scale is None else scale
+
+    s_idx = jnp.arange(r)[None, :]                        # [1, R]
+    pos = p_max - jnp.mod(p_max - s_idx, r)               # [1, R] absolute
+    qp = q_positions[:, None]                             # [C, 1]
+    valid = (pos >= 0) & (pos <= qp) & (pos > qp - window)  # [C, R]
+
+    qg = q.reshape(b, c, hkv, g, d).astype(jnp.float32)
+    kc = k_ring.astype(jnp.float32)
+    vc = v_ring.astype(jnp.float32)
+    sc = jnp.einsum("bchgd,brhd->bchgr", qg, kc) * scale  # [B,C,Hkv,G,R]
+    sc = jnp.where(valid[None, :, None, None, :], sc, NEG_INF)
+    pr = jax.nn.softmax(sc, axis=-1)
+    pr = jnp.where(valid[None, :, None, None, :], pr, 0.0)
+    out = jnp.einsum("bchgr,brhd->bchgd", pr, vc)
+    return out.reshape(b, c, hq, d).astype(q.dtype)
 
 
 # ---------------------------------------------------------------------------

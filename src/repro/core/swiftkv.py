@@ -165,6 +165,7 @@ def swiftkv_decode_blockwise(q: jax.Array, k: jax.Array, v: jax.Array,
                              length: jax.Array | None = None,
                              *, block_size: int = 512,
                              window: int | None = None,
+                             ring: bool = False,
                              scale: float | None = None) -> jax.Array:
     """Blockwise single-pass SwiftKV decode (the TPU-shaped reference that the
     Pallas kernel mirrors). q: [D]; k, v: [S, D].
@@ -173,14 +174,26 @@ def swiftkv_decode_blockwise(q: jax.Array, k: jax.Array, v: jax.Array,
     entries attend (h2o-danube / hymba SWA); in-range blocks are touched
     once, with fully-out-of-window blocks contributing zero.
 
+    ``ring``: the cache is a **ring** of R = S slots where slot ``s`` holds
+    absolute position ``p - ((p - s) mod R)`` for ``p = length - 1`` (the
+    newest token lives at ``(length-1) % R``). Validity is decided from
+    that per-slot position instead of the slot index, so a wrapped cache is
+    consumed in place — same single pass, no unrotate copy, no rescan; the
+    ``(mu, Z, Y)`` recurrence is order-independent, so ring order and
+    temporal order fold to the same result. Requires ``window`` (rings only
+    exist for SWA configs).
+
     The loop trip count is **length-adaptive**: blocks past the valid
     prefix are exact state no-ops (every lane masked), so the loop runs
     ``cdiv(length, block_size)`` iterations — a traced bound that lowers to
     a ``while_loop``; under the ``decode_attention`` vmap the batch runs to
     the longest *active* row's count, so decode attention work scales with
-    actual occupancy, not the cache allocation. The static single-block
-    case stays straight-line HLO (the dry-run cost pass sets
-    ``block_size = seq_len`` precisely so the loop disappears)."""
+    actual occupancy, not the cache allocation (a wrapped ring row runs all
+    R slots — its whole working set). The static single-block case stays
+    straight-line HLO (the dry-run cost pass sets ``block_size = seq_len``
+    precisely so the loop disappears)."""
+    if ring and window is None:
+        raise ValueError("ring caches are windowed: pass window with ring=True")
     d = q.shape[-1]
     s_cache = k.shape[0]
     scale = (1.0 / jnp.sqrt(d)) if scale is None else scale
@@ -197,9 +210,14 @@ def swiftkv_decode_blockwise(q: jax.Array, k: jax.Array, v: jax.Array,
         k_blk = jax.lax.dynamic_slice_in_dim(k, start, block_size).astype(jnp.float32)
         v_blk = jax.lax.dynamic_slice_in_dim(v, start, block_size).astype(jnp.float32)
         t = start + jnp.arange(block_size)
-        valid = t < length
-        if window is not None:
-            valid &= t >= length - window
+        if ring:
+            p = length - 1
+            pos = p - jnp.mod(p - t, s_cache)       # slot -> absolute position
+            valid = (t < s_cache) & (pos >= 0) & (pos > p - window)
+        else:
+            valid = t < length
+            if window is not None:
+                valid &= t >= length - window
         s_blk = (k_blk @ qf) * scale  # [Bk]
         return state_update_block(state, s_blk, v_blk, valid.astype(jnp.float32))
 

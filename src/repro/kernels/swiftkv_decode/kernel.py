@@ -58,7 +58,7 @@ def _exp_lut(x, lut_vals, lut_slopes):
 
 def _kernel(lengths_ref,                     # scalar prefetch [B] int32
             *refs, block_k: int, n_blocks: int, window: int | None,
-            scale: float, exp_mode: str):
+            scale: float, exp_mode: str, ring: bool):
     if exp_mode == "lut":
         q_ref, k_ref, v_ref, lut_ref, o_ref, m_scr, z_scr, y_scr = refs
         exp = functools.partial(_exp_lut, lut_vals=lut_ref[0],
@@ -85,10 +85,22 @@ def _kernel(lengths_ref,                     # scalar prefetch [B] int32
         v = jnp.squeeze(v_ref[...], axis=(0, 2)).astype(jnp.float32)
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32) * scale
-        pos = i * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-        valid = pos < length
-        if window is not None:
-            valid &= pos >= length - window
+        slot = i * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        if ring:
+            # ring cache: slot s holds absolute position p - ((p - s) mod R)
+            # for p = length - 1 (R = n_blocks * block_k). Validity comes
+            # from that position, so a wrapped ring streams through the same
+            # BlockSpec index maps untouched — no unrotate copy, and the
+            # (mu, Z, Y) fold is order-independent so ring order is exact.
+            r = n_blocks * block_k
+            p = length - 1
+            pos = p - jnp.mod(p - slot, r)
+            valid = (pos >= 0) & (pos > p - window)
+        else:
+            pos = slot
+            valid = pos < length
+            if window is not None:
+                valid &= pos >= length - window
         s = jnp.where(valid, s, NEG_INF)                 # [G, block_k]
         valid_f = valid.astype(jnp.float32)
 
@@ -111,15 +123,20 @@ def _kernel(lengths_ref,                     # scalar prefetch [B] int32
 
 def swiftkv_decode_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
                           lengths: jax.Array, *, block_k: int = 512,
-                          window: int | None = None, scale: float,
-                          exp_mode: str = "native",
+                          window: int | None = None, ring: bool = False,
+                          scale: float, exp_mode: str = "native",
                           interpret: bool = False) -> jax.Array:
     """q: [B, Hkv, G, D]; k, v: [B, S, Hkv, D] — the **cache-native**
     layout, consumed directly through the BlockSpec index maps (S a
     multiple of block_k); lengths: [B] int32. Returns [B, Hkv, G, D] in
     q.dtype. Feeding the cache layout straight to the grid is what lets the
     ops wrapper stop paying a whole-cache swapaxes+pad copy per layer per
-    decode step."""
+    decode step. ``ring=True`` consumes a ring cache of R = S slots in
+    place (slot ``s`` holds position ``p - ((p - s) mod R)``, ``p =
+    lengths-1``); only the validity mask changes — the same index maps
+    stream the wrapped cache with zero copies. The unwrapped prefix clamp
+    still applies: while ``lengths <= S`` blocks past the written prefix
+    are neither fetched nor folded."""
     bsz, hkv, g, d = q.shape
     s_len = k.shape[1]
     assert s_len % block_k == 0, (s_len, block_k)
@@ -157,7 +174,8 @@ def swiftkv_decode_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
         ],
     )
     kernel = functools.partial(_kernel, block_k=block_k, n_blocks=n_blocks,
-                               window=window, scale=scale, exp_mode=exp_mode)
+                               window=window, scale=scale, exp_mode=exp_mode,
+                               ring=ring)
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,

@@ -24,11 +24,11 @@ def _auto_interpret() -> bool:
 
 
 @functools.partial(jax.jit, static_argnames=("window", "block_k", "scale",
-                                             "exp_mode", "interpret"))
+                                             "exp_mode", "ring", "interpret"))
 def swiftkv_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
                    lengths: jax.Array, *, window: int | None = None,
                    block_k: int = 512, scale: float | None = None,
-                   exp_mode: str = "native",
+                   exp_mode: str = "native", ring: bool = False,
                    interpret: bool | None = None) -> jax.Array:
     """SwiftKV single-pass decode attention (Pallas).
 
@@ -40,7 +40,17 @@ def swiftkv_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     misaligned, raises: allocate the cache block-aligned at ``init_cache``
     instead of paying a pad+copy (or an unaligned whole-cache stream) per
     layer per decode step.
+
+    ``ring=True``: the cache is a ring of R = S slots (newest token at
+    ``(lengths-1) % R``); ``lengths`` counts tokens seen, and may exceed S
+    once wrapped. The ring streams through the same BlockSpec index maps as
+    a linear cache — zero-copy, no host-side unrotate — with per-slot
+    positions recovered arithmetically inside the kernel. Requires
+    ``window`` (rings only exist for SWA configs).
     """
+    if ring and window is None:
+        raise ValueError("swiftkv_decode: ring caches are windowed — pass "
+                         "window with ring=True")
     b, hq, d = q.shape
     s_len, hkv = k_cache.shape[1], k_cache.shape[2]
     assert hq % hkv == 0
@@ -65,6 +75,7 @@ def swiftkv_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     qg = q.reshape(b, hkv, g, d)
     out = swiftkv_decode_pallas(qg, k_cache, v_cache,
                                 lengths.astype(jnp.int32),
-                                block_k=block_k, window=window, scale=scale,
-                                exp_mode=exp_mode, interpret=interpret)
+                                block_k=block_k, window=window, ring=ring,
+                                scale=scale, exp_mode=exp_mode,
+                                interpret=interpret)
     return out.reshape(b, hq, d)

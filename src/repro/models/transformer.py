@@ -408,8 +408,13 @@ class TransformerLM:
         n_self = cfg.n_layers - n_cross
         kv_len = max_len
         if cfg.kv_ring and cfg.window:
-            # ring cache: ~window slots regardless of context (SWA archs);
-            # +128 rounding keeps the lane dimension aligned
+            # ring cache: ~window slots regardless of context (SWA archs).
+            # Decode needs ring_len >= window + 1 (the new token's write
+            # must only ever evict the position leaving the window); the
+            # 128-rounding keeps the sublane dimension aligned AND leaves
+            # the slack chunked serving needs (prefill_chunk requires
+            # ring_len >= window + chunk - 1 — enforced by the continuous
+            # engine at construction, where chunk is known)
             kv_len = min(max_len, -(-(cfg.window + 1) // 128) * 128)
         if cfg.decode_impl == "kernel":
             # kernel-path alignment contract (kernels/swiftkv_decode/ops.py):
@@ -479,15 +484,32 @@ class TransformerLM:
 
     @staticmethod
     def _write_kv(kc: jax.Array, vc: jax.Array, k: jax.Array, v: jax.Array,
-                  lengths: jax.Array):
+                  lengths: jax.Array, active: jax.Array | None = None):
         """kc/vc: [B, Smax, Hkv, Dh]; k/v: [B, Hkv, Dh] written at per-row
         position ``lengths`` (mod ring size — a full-context cache never
-        wraps; a ring cache overwrites the slot that just left the window)."""
+        wraps; a ring cache overwrites the slot that just left the window).
+
+        ``active``: optional [B] bool **per-slot write mask** — rows with
+        ``active=False`` rewrite their old value (an in-place no-op). This
+        is the ragged-decode parking mechanism for ring caches: a ring has
+        no dead tail row to park on (every slot is, or will wrap into, a
+        live window position), so a parked write must not move data at
+        all. Full caches park on the reserved tail row instead and pass
+        ``active=None``."""
         r = kc.shape[1]
-        def upd(c, x, l):
-            return jax.lax.dynamic_update_slice(c, x[None], (l % r, 0, 0))
-        kc = jax.vmap(upd)(kc, k, lengths)
-        vc = jax.vmap(upd)(vc, v, lengths)
+        if active is None:
+            def upd(c, x, l):
+                return jax.lax.dynamic_update_slice(c, x[None], (l % r, 0, 0))
+            kc = jax.vmap(upd)(kc, k, lengths)
+            vc = jax.vmap(upd)(vc, v, lengths)
+            return kc, vc
+
+        def upd_masked(c, x, l, a):
+            old = jax.lax.dynamic_slice(c, (l % r, 0, 0), (1, *c.shape[1:]))
+            return jax.lax.dynamic_update_slice(
+                c, jnp.where(a, x[None], old), (l % r, 0, 0))
+        kc = jax.vmap(upd_masked)(kc, k, lengths, active)
+        vc = jax.vmap(upd_masked)(vc, v, lengths, active)
         return kc, vc
 
     def _decode_self_attn(self, p: Params, h: jax.Array, kc, vc,
@@ -503,8 +525,18 @@ class TransformerLM:
             q = rms_norm(q, p["qn"], cfg.norm_eps)
             k = rms_norm(k, p["kn"], cfg.norm_eps)
         q, k = self._rope_qk_decode(cache, q, k, cache["len"])
+        ring = bool(cfg.kv_ring and cfg.window)
+        write_mask = None
         if active is None:
             write_at, attn_len = cache["len"], cache["len"] + 1
+        elif ring:
+            # ragged ring batch: inactive rows have no dead row to park on
+            # (the tail is a live window slot once wrapped), so parking is a
+            # per-slot write *mask* — the row rewrites its old value in
+            # place — plus a 1-token stub attention length
+            write_at = cache["len"]
+            attn_len = jnp.where(active, cache["len"] + 1, 1)
+            write_mask = active
         else:
             # ragged batch: inactive rows (free / mid-prefill slots) park
             # their discarded KV write on the reserved tail row and attend a
@@ -513,15 +545,11 @@ class TransformerLM:
             write_at = jnp.where(active, cache["len"], kc.shape[1] - 1)
             attn_len = jnp.where(active, cache["len"] + 1, 1)
         kc, vc = self._write_kv(kc, vc, k.astype(kc.dtype), v.astype(vc.dtype),
-                                write_at)
-        if cfg.kv_ring and cfg.window:
-            out = attn_lib.decode_attention_ring(q, kc, vc, attn_len,
-                                                 window=cfg.window)
-        else:
-            out = attn_lib.decode_attention(q, kc, vc, attn_len,
-                                            impl=cfg.decode_impl,
-                                            window=cfg.window,
-                                            block_size=cfg.attn_block or 512)
+                                write_at, write_mask)
+        out = attn_lib.decode_attention(q, kc, vc, attn_len,
+                                        impl=cfg.decode_impl,
+                                        window=cfg.window, ring=ring,
+                                        block_size=cfg.attn_block or 512)
         return linear(p, "wo", out.reshape(b, -1)), kc, vc
 
     def _decode_cross_attn(self, p: Params, h: jax.Array, ck, cv,
@@ -592,14 +620,14 @@ class TransformerLM:
         while slot membership changes between steps. Recurrent-state
         families (ssm / hybrid) have no parking row — the row *is* the
         state — so inactive rows carry their (wkv / conv, ssm) state through
-        unchanged via ``jnp.where`` selects. The per-row incremental-RoPE
+        unchanged via ``jnp.where`` selects. Ring KV caches (``kv_ring``
+        SWA configs) have no parking row either — every ring slot is, or
+        wraps into, a live window position — so their inactive rows park
+        via a per-slot write *mask* (:meth:`_write_kv` ``active=``), the
+        row rewriting its old value in place. The per-row incremental-RoPE
         state still advances for every row; a slot's state is reseeded by
         ``finalize_slot`` when a new request fills it."""
         cfg = self.cfg
-        if active is not None and cfg.kv_ring and cfg.window:
-            raise NotImplementedError(
-                "ragged decode: a ring cache has no reserved tail row — the "
-                "parked write would land on a live in-window ring slot")
         x = params["embed"].astype(self._dt)[tokens]             # [B, d]
 
         if cfg.family == "ssm":
@@ -883,13 +911,16 @@ class TransformerLM:
         *reference* drops tokens and the drop-free continuous output is the
         more faithful one.
 
-        Still gated: cross-attention stacks (vlm / audio — per-slot source
-        KV would need its own pool) and ring KV caches (no reserved tail row
-        for the parked masked write)."""
+        Ring KV caches (``kv_ring`` SWA configs) serve ragged too: parked
+        rows use a per-slot write mask instead of the reserved tail row,
+        chunked prefill writes at ``pos % ring_len`` with wrap, and the
+        decode paths consume the ring in place (no unrotate copy).
+
+        The one remaining gated set: **cross-attention stacks** (vlm /
+        audio) — per-slot source KV would need its own pool keyed by source
+        id. ``tests/test_serving_conformance.py`` pins this enumeration."""
         cfg = self.cfg
-        return (cfg.family not in ("audio",)
-                and not cfg.cross_attn_every
-                and not (cfg.kv_ring and cfg.window))
+        return cfg.family not in ("audio",) and not cfg.cross_attn_every
 
     def prefill_chunk(self, params: Params, tokens: jax.Array, cache: Cache,
                       slot: jax.Array, offset: jax.Array, last: jax.Array
@@ -917,12 +948,24 @@ class TransformerLM:
         continue the slot's (conv, ssm) Mamba state chunk to chunk, with
         padded tail positions masked into exact state no-ops. MoE FFNs use
         the capacity-free per-row dispatch (a padded position must not steal
-        expert capacity from a real token)."""
+        expert capacity from a real token).
+
+        Ring KV configs (``kv_ring`` SWA) fill the slot's ring chunk by
+        chunk at ``pos % ring_len`` — a prompt longer than the ring wraps
+        and overwrites its own oldest (out-of-window) entries, which is
+        what makes the long-context scenario (prompt >> window) servable at
+        all. Padded tail positions are *keep*-masked (they rewrite the old
+        slot value), so only real tokens ever occupy ring slots, and the
+        chunk attends through :func:`attn_lib.prefill_attention_ring` —
+        exact as long as ``ring_len >= window + chunk - 1`` (a later
+        in-chunk token then only ever overwrites positions already outside
+        every live query's window; the serving engine enforces the bound at
+        construction)."""
         cfg = self.cfg
         if not self.supports_ragged_serving():
             raise NotImplementedError(
                 f"prefill_chunk: unsupported config {cfg.name} "
-                "(cross-attention / ring KV)")
+                "(cross-attention stack)")
         if cfg.family == "ssm":
             return self._rwkv_prefill_chunk(params, tokens, cache, slot, last)
         (c,) = tokens.shape
@@ -934,24 +977,51 @@ class TransformerLM:
         q_off = jnp.reshape(offset, (1,)).astype(jnp.int32)
         n_valid = last + 1
 
+        ring = bool(cfg.kv_ring and cfg.window)
+
         def step(x, xs):
             bp, slices = xs
             new = {}
             ap = bp["attn"]
             h = rms_norm(x, bp["ln1"], cfg.norm_eps)
             q, k, v = self._qkv_rope(ap, h, positions)
-            kc = jax.lax.dynamic_update_slice(
-                slices["k"], k.astype(slices["k"].dtype), (slot, offset, 0, 0))
-            vc = jax.lax.dynamic_update_slice(
-                slices["v"], v.astype(slices["v"].dtype), (slot, offset, 0, 0))
-            k_slot = jax.lax.dynamic_slice(kc, (slot, 0, 0, 0),
-                                           (1, smax, hkv, dh))
-            v_slot = jax.lax.dynamic_slice(vc, (slot, 0, 0, 0),
-                                           (1, smax, hkv, dh))
-            attn = attn_lib.prefill_attention(
-                q, k_slot, v_slot, causal=True, window=cfg.window,
-                kv_lengths=kv_len, q_offset=q_off,
-                kv_block=cfg.attn_block or 512)
+            if ring:
+                # ring fill: chunk token at absolute position p lands in
+                # ring slot p % R (wrap-aware scatter); padded tail rows
+                # (> last) keep the old slot value so only real tokens
+                # occupy ring slots
+                idx = jnp.mod(positions, smax)                   # [C]
+                keep = (jnp.arange(c) <= last)[:, None, None]
+                k_slot = jax.lax.dynamic_slice(slices["k"], (slot, 0, 0, 0),
+                                               (1, smax, hkv, dh))
+                v_slot = jax.lax.dynamic_slice(slices["v"], (slot, 0, 0, 0),
+                                               (1, smax, hkv, dh))
+                k_slot = k_slot.at[0, idx].set(
+                    jnp.where(keep, k[0].astype(k_slot.dtype), k_slot[0, idx]))
+                v_slot = v_slot.at[0, idx].set(
+                    jnp.where(keep, v[0].astype(v_slot.dtype), v_slot[0, idx]))
+                kc = jax.lax.dynamic_update_slice(slices["k"], k_slot,
+                                                  (slot, 0, 0, 0))
+                vc = jax.lax.dynamic_update_slice(slices["v"], v_slot,
+                                                  (slot, 0, 0, 0))
+                attn = attn_lib.prefill_attention_ring(
+                    q, k_slot, v_slot, positions, offset + last,
+                    window=cfg.window)
+            else:
+                kc = jax.lax.dynamic_update_slice(
+                    slices["k"], k.astype(slices["k"].dtype),
+                    (slot, offset, 0, 0))
+                vc = jax.lax.dynamic_update_slice(
+                    slices["v"], v.astype(slices["v"].dtype),
+                    (slot, offset, 0, 0))
+                k_slot = jax.lax.dynamic_slice(kc, (slot, 0, 0, 0),
+                                               (1, smax, hkv, dh))
+                v_slot = jax.lax.dynamic_slice(vc, (slot, 0, 0, 0),
+                                               (1, smax, hkv, dh))
+                attn = attn_lib.prefill_attention(
+                    q, k_slot, v_slot, causal=True, window=cfg.window,
+                    kv_lengths=kv_len, q_offset=q_off,
+                    kv_block=cfg.attn_block or 512)
             attn_out = linear(ap, "wo", attn.reshape(1, c, -1))
             new["k"], new["v"] = kc, vc
             if cfg.family == "hybrid":
@@ -1112,12 +1182,21 @@ class TransformerLM:
         overwrites the contents in place. Recurrent state (RWKV x_prev/wkv,
         Mamba conv/ssm) is *zeroed*, not just ignored — unlike KV rows it
         feeds forward multiplicatively, so the next occupant's first chunk
-        must start from the empty-context state."""
+        must start from the empty-context state. Ring KV rows are zeroed
+        too: the ring position-recovery formula already masks a previous
+        occupant's stale slots (their recovered position is negative until
+        the new request wraps), but zeroing keeps the reset contract
+        uniform and inspectable — after release a slot's device state is
+        all-zeros for every family."""
         cache = dict(cache, len=cache["len"].at[slot].set(0))
         for key in ("rwkv_att", "rwkv_ffn", "rwkv_wkv",
                     "mamba_conv", "mamba_ssm"):
             if key in cache:
                 cache[key] = cache[key].at[:, slot].set(0)
+        if self.cfg.kv_ring and self.cfg.window:
+            for key in ("k", "v"):
+                if key in cache:
+                    cache[key] = cache[key].at[:, slot].set(0)
         return cache
 
     def _rwkv_prefill(self, params: Params, x: jax.Array,

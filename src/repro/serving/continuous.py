@@ -41,6 +41,14 @@ masked-out cache rows are exact no-ops in the (mu, Z, Y) recurrence,
 recurrent-state rows (ssm / hybrid) carry through masked ticks unchanged,
 and MoE rows use the capacity-free per-row dispatch.
 
+Ring KV configs (``kv_ring`` SWA archs) serve with **O(window) slots**:
+``init_cache`` allocates ``[n_slots, ring_len, Hkv, D]`` rings, chunked
+prefill writes at ``pos % ring_len`` (a prompt longer than the window wraps
+over its own out-of-window entries), parked rows use a per-slot write mask
+instead of the reserved tail row, and the decode kernels consume the ring
+in place. ``report()``'s ``kv_bytes_per_slot`` / ``kv_rows_per_slot`` lines
+make the memory win a measured number.
+
 Sampling (temperature > 0) is fused into the jit'd block as seeded per-slot
 Gumbel-max (``argmax(logits/T + g)`` with ``g ~ Gumbel(0,1)`` is exactly a
 softmax(logits/T) draw). Keys derive from ``(seed, request admission
@@ -90,7 +98,8 @@ class ContinuousBatchingEngine:
             raise ValueError(
                 f"{model.cfg.name}: continuous batching needs a "
                 "slot-serializable decode state (cross-attention source KV "
-                "and ring KV caches are not poolable yet)")
+                "is not poolable yet — it would need its own pool keyed by "
+                "source id)")
         if chunk < 1 or max_len % chunk:
             raise ValueError(f"chunk ({chunk}) must divide max_len "
                              f"({max_len}) so padded chunks stay in range")
@@ -127,6 +136,22 @@ class ContinuousBatchingEngine:
         self._prefill_pick = jax.jit(_prefill_pick)
 
         self.cache = model.init_cache(n_slots, max_len)
+        cfg = model.cfg
+        if cfg.kv_ring and cfg.window and "k" in self.cache:
+            # ring-prefill exactness bound: a chunk's later tokens may
+            # overwrite ring slots its earlier queries still need unless
+            # the overwritten positions are already outside every live
+            # window — guaranteed iff ring_len >= window + chunk - 1. A
+            # ring as large as max_len never wraps (slot capacity bounds
+            # every position below max_len), so it is exempt.
+            ring_len = int(self.cache["k"].shape[2])
+            if ring_len < max_len and chunk > ring_len - cfg.window + 1:
+                raise ValueError(
+                    f"chunk ({chunk}) too large for the ring: a "
+                    f"{ring_len}-slot ring over window {cfg.window} "
+                    f"supports chunks up to {ring_len - cfg.window + 1} "
+                    "(ring_len >= window + chunk - 1 keeps chunked "
+                    "prefill exact under wraparound)")
         self.tok = np.full((n_slots,), pad_id, np.int32)
         self.active = np.zeros((n_slots,), bool)
         # per-slot sampler / retirement state, mirrored on device per block:
@@ -378,6 +403,13 @@ class ContinuousBatchingEngine:
         gen = sum(len(s.tokens) for s in done)
         ttfts = sorted(s.ttft for s in done if s.ttft is not None)
         itls = sorted(x for s in done for x in s.itl_ms)
+        # per-slot KV memory accounting: the O(window) win of ring caches
+        # (kv_rows_per_slot == ring_len << max_len) is a reported number,
+        # not an inference from shapes; recurrent-state families carry no
+        # KV rows and report 0
+        kv = [self.cache[k] for k in ("k", "v", "cross_k", "cross_v")
+              if k in self.cache]
+        kv_bytes = sum(int(a.size) * a.dtype.itemsize for a in kv)
         agg = {
             "n_requests": self.sched.n_submitted,
             "n_retired": self.sched.n_retired,
@@ -398,6 +430,10 @@ class ContinuousBatchingEngine:
                 self.active_row_steps
                 / (self.decode_steps * self.pool.n_slots), 3)
                 if self.decode_steps else 0.0,
+            "kv_bytes_per_slot": kv_bytes // self.pool.n_slots,
+            "kv_rows_per_slot": (int(self.cache["k"].shape[2])
+                                 if "k" in self.cache else 0),
+            "max_len": self.pool.max_len,
             "ttft_p50_s": _pct(ttfts, 0.50),
             "ttft_p95_s": _pct(ttfts, 0.95),
             "itl_p50_ms": _pct(itls, 0.50),

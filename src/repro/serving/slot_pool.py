@@ -12,7 +12,14 @@ Layout contract with :meth:`TransformerLM.decode_step`'s ragged form:
 * the **final cache row** (index ``max_len - 1``) is reserved as the parking
   position for the masked KV writes of inactive slots, so a request is only
   admissible if ``prompt_len + max_new_tokens <= capacity`` where
-  ``capacity = max_len - 1``;
+  ``capacity = max_len - 1``. Ring KV caches (``kv_ring`` SWA configs) have
+  no parkable dead row — every ring slot is, or wraps into, a live window
+  position — so their inactive slots park via a per-slot **write mask**
+  (the row rewrites its old value in place; ``TransformerLM._write_kv``
+  ``active=``). The tail reservation still prices admission for rings:
+  ``capacity`` bounds a request's *position* budget (``cache['len']`` /
+  RoPE state run over absolute positions), which is ``max_len``-scaled even
+  when the live KV working set is only ``ring_len`` rows;
 * release resets the slot's ledger length (and the device ``len`` entry via
   :meth:`TransformerLM.release_slot`), so nothing in a freed slot's KV rows
   is ever attended again — the next occupant's chunked prefill overwrites

@@ -1,31 +1,24 @@
 """Multi-tick decode blocks (``TransformerLM.decode_multi`` + the engine's
-adaptive tick horizon): greedy outputs must be token-for-token equal to
-per-request lock-step generation at every tick horizon, across every ragged
-family; seeded temperature>0 streams must be *tick-horizon-invariant*
-(sampler keys are request-intrinsic — (seed, serial, token index) — so the
-draw for token i cannot depend on how ticks were blocked); on-device
-EOS/budget retirement must match the host's replay; and the dispatch
-accounting must actually show the round-trip collapse."""
+adaptive tick horizon): seeded temperature>0 streams must be
+*tick-horizon-invariant* (sampler keys are request-intrinsic — (seed,
+serial, token index) — so the draw for token i cannot depend on how ticks
+were blocked); on-device EOS/budget retirement must match the host's
+replay; and the dispatch accounting must actually show the round-trip
+collapse. The per-family greedy-equivalence sweep at decode_ticks 1 and 8
+lives in the shared harness of ``test_serving_conformance.py``."""
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.configs import get_config
 from repro.models.api import build_model
-from repro.serving import (ContinuousBatchingEngine, Request, ServingEngine,
-                           poisson_trace)
+from repro.serving import ContinuousBatchingEngine, Request, poisson_trace
 
 jax.config.update("jax_platform_name", "cpu")
 
 TICK_HORIZONS = (1, 4, 8)
-
-# one arch per ragged decode mechanism: KV parking (MHA / GQA+qk_norm /
-# GQA+SWA), masked recurrent-state carries (ssm / hybrid), row-wise MoE
-ARCHS = ["llama2-7b", "qwen3-8b", "h2o-danube-1.8b",
-         "rwkv6-3b", "hymba-1.5b", "olmoe-1b-7b"]
 
 
 def _build(arch):
@@ -38,30 +31,6 @@ def _build(arch):
 @pytest.fixture(scope="module")
 def dense_model():
     return _build("llama2-7b")
-
-
-@pytest.mark.parametrize("arch", ARCHS)
-def test_multi_tick_greedy_matches_per_request(arch, dense_model):
-    """decode_ticks in {1, 4, 8}: every request's continuous output equals
-    its single-request lock-step generation token-for-token. The scanned
-    block body IS decode_step(active=...), so this holds per family: KV
-    parking, masked state carries, and row-wise MoE dispatch."""
-    cfg, model, params = (dense_model if arch == "llama2-7b"
-                          else _build(arch))
-    trace = poisson_trace(n_requests=4, vocab_size=cfg.vocab_size,
-                          prompt_len=(3, 18), max_new=(3, 12), seed=5)
-    ref = ServingEngine(model, params, max_len=64, batch=1)
-    want = {r.rid: np.asarray(ref.generate(
-        jnp.asarray(r.prompt)[None], steps=r.max_new_tokens))[0].tolist()
-        for r in trace}
-    for ticks in TICK_HORIZONS:
-        eng = ContinuousBatchingEngine(model, params, n_slots=2, max_len=64,
-                                       chunk=8, decode_ticks=ticks)
-        report = eng.run(list(trace))
-        got = {r["rid"]: r["tokens"] for r in report["requests"]}
-        assert got == want, (arch, ticks)
-        assert report["aggregate"]["n_retired"] == len(trace)
-        assert eng.pool.n_free == 2          # all slots returned
 
 
 def test_sampled_stream_invariant_across_tick_horizons(dense_model):

@@ -102,3 +102,133 @@ def test_kernel_misaligned_cache_raises():
     q, k, v, lengths = mk(2, 4, 2, 300, 64, jnp.float32)
     with pytest.raises(ValueError, match="block-aligned"):
         ops.swiftkv_decode(q, k, v, lengths, block_k=128, interpret=True)
+
+
+# ---------------------------------------------------------------------------
+# ring caches: rotated layouts consumed in place
+# ---------------------------------------------------------------------------
+
+RING = 256          # ring slots (= S fed to the kernel)
+RWIN = 100          # SWA window
+
+
+def _ringify(full: np.ndarray, lengths, r: int) -> jnp.ndarray:
+    """Rotate a temporal cache into ring layout: slot s holds the newest
+    position congruent to s mod r (zeros where that position is negative,
+    i.e. before the row has written slot s)."""
+    b, _, hkv, d = full.shape
+    ring = np.zeros((b, r, hkv, d), full.dtype)
+    for i in range(b):
+        p = int(lengths[i]) - 1
+        for s in range(r):
+            pos = p - ((p - s) % r)
+            if pos >= 0:
+                ring[i, s] = full[i, pos]
+    return jnp.asarray(ring)
+
+
+# wrap offset: where (lengths mod RING) sits relative to the ring — exactly
+# on the boundary, one past it, one short of a block edge, and mid-ring
+@pytest.mark.parametrize("wrap_off", [0, 1, 127, 131])
+def test_kernel_ring_rotated_cache(wrap_off):
+    """The Pallas wrapper consumes a wrapped (rotated) ring cache in place
+    and matches the temporal-layout oracle exactly — one wrapped row, one
+    unwrapped row, one fresh row per batch."""
+    b, hq, hkv, d = 3, 4, 2, 64
+    lengths = np.asarray([2 * RING + wrap_off, RING - 37, 1], np.int32)
+    L = int(lengths.max())
+    kf = np.asarray(RNG.standard_normal((b, L, hkv, d)), np.float32)
+    vf = np.asarray(RNG.standard_normal((b, L, hkv, d)), np.float32)
+    q = jnp.asarray(RNG.standard_normal((b, hq, d)), jnp.float32)
+    kr, vr = _ringify(kf, lengths, RING), _ringify(vf, lengths, RING)
+    got = ops.swiftkv_decode(q, kr, vr, jnp.asarray(lengths), window=RWIN,
+                             ring=True, block_k=128, interpret=True)
+    want = ref.swiftkv_decode_ref(q, jnp.asarray(kf), jnp.asarray(vf),
+                                  jnp.asarray(lengths), window=RWIN)
+    np.testing.assert_allclose(got, want, atol=2e-5)
+
+
+@pytest.mark.parametrize("wrap_off", [0, 1, 127, 131])
+def test_blockwise_ring_rotated_cache(wrap_off):
+    """swiftkv_decode_blockwise (the TPU-shaped reference the kernel
+    mirrors) folds the same rotated ring to the same result through
+    decode_attention's ring dispatch."""
+    from repro.core import attention as attn
+    b, hq, hkv, d = 2, 4, 2, 64
+    lengths = np.asarray([2 * RING + wrap_off, RING + wrap_off // 2 + 7],
+                         np.int32)
+    L = int(lengths.max())
+    kf = np.asarray(RNG.standard_normal((b, L, hkv, d)), np.float32)
+    vf = np.asarray(RNG.standard_normal((b, L, hkv, d)), np.float32)
+    q = jnp.asarray(RNG.standard_normal((b, hq, d)), jnp.float32)
+    kr, vr = _ringify(kf, lengths, RING), _ringify(vf, lengths, RING)
+    got = attn.decode_attention(q, kr, vr, jnp.asarray(lengths),
+                                impl="blockwise", window=RWIN, ring=True,
+                                block_size=128)
+    want = ref.swiftkv_decode_ref(q, jnp.asarray(kf), jnp.asarray(vf),
+                                  jnp.asarray(lengths), window=RWIN)
+    np.testing.assert_allclose(got, want, atol=2e-5)
+
+
+def _flat_primitives(jaxpr, acc: set) -> set:
+    for eqn in jaxpr.eqns:
+        acc.add(eqn.primitive.name)
+        for v in eqn.params.values():
+            vs = v if isinstance(v, (list, tuple)) else (v,)
+            for x in vs:
+                inner = getattr(x, "jaxpr", None)
+                if inner is not None:
+                    _flat_primitives(inner, acc)
+                elif hasattr(x, "eqns"):
+                    _flat_primitives(x, acc)
+    return acc
+
+
+def test_kernel_ring_consumed_zero_copy():
+    """No silent unrotate: the lowered ring kernel program recovers slot
+    positions arithmetically — it must contain no gather / roll / sort /
+    scatter of the cache (a host-side unrotation would need one)."""
+    q = jnp.zeros((2, 4, 64), jnp.float32)
+    kr = jnp.zeros((2, RING, 2, 64), jnp.float32)
+    lengths = jnp.asarray([2 * RING + 5, 40], jnp.int32)
+    jaxpr = jax.make_jaxpr(
+        lambda *a: ops.swiftkv_decode(*a, window=RWIN, ring=True,
+                                      block_k=128, interpret=True))(
+        q, kr, kr, lengths)
+    prims = _flat_primitives(jaxpr.jaxpr, set())
+    assert not prims & {"gather", "roll", "sort", "scatter",
+                        "scatter-add", "rev"}, prims
+
+
+def test_blockwise_ring_adds_no_data_movement():
+    """The blockwise ring program must be the linear-cache program plus
+    position *arithmetic* only: an unrotate would show up as new
+    data-movement primitives (gather of the whole cache, roll, sort, ...)
+    relative to the plain windowed decode on the same shapes."""
+    from repro.core import attention as attn
+    q = jnp.zeros((2, 4, 64), jnp.float32)
+    kr = jnp.zeros((2, RING, 2, 64), jnp.float32)
+    lengths = jnp.asarray([2 * RING + 5, 40], jnp.int32)
+
+    def fn(ring):
+        return jax.make_jaxpr(
+            lambda *a: attn.decode_attention(*a, impl="blockwise",
+                                             window=RWIN, ring=ring,
+                                             block_size=128))(
+            q, kr, kr, lengths)
+
+    ring_prims = _flat_primitives(fn(True).jaxpr, set())
+    linear_prims = _flat_primitives(fn(False).jaxpr, set())
+    arithmetic = {"rem", "add", "sub", "mul", "sign", "select_n", "and",
+                  "or", "not", "lt", "le", "gt", "ge", "eq", "ne",
+                  "convert_element_type", "broadcast_in_dim", "iota",
+                  "stop_gradient"}
+    assert ring_prims - linear_prims <= arithmetic, \
+        ring_prims - linear_prims
+
+
+def test_ring_requires_window():
+    q, k, v, lengths = mk(2, 4, 2, 256, 64, jnp.float32)
+    with pytest.raises(ValueError, match="window"):
+        ops.swiftkv_decode(q, k, v, lengths, ring=True, block_k=128,
+                           interpret=True)

@@ -1,0 +1,158 @@
+"""Ring-KV equivalence properties (hypothesis-driven, with the seeded
+explicit-case fallback when hypothesis is absent).
+
+A ``kv_ring=True`` model must be *indistinguishable* from its full-cache
+twin — the twin IS the windowed reference, since SWA masking on a full
+cache keeps every in-window position exactly:
+
+  * **unwrapped** (total length <= window <= ring): identical logits and
+    greedy tokens — the ring is a plain cache until it wraps;
+  * **wrapped** (prompt > window, positions past the ring length): greedy
+    tokens still match the full-cache twin token-for-token, because every
+    position the window can see survives in the ring by construction
+    (ring_len >= window + 1 for decode; >= window + chunk - 1 under
+    chunked prefill);
+  * an engine-level mid-block **EOS retirement landing exactly on a ring
+    wrap boundary** frees the slot cleanly and the backfilled request's
+    stream is still exact;
+  * the O(window) claim is a *reported number*: ``kv_bytes_per_slot``
+    scales as ring_len / max_len vs the full-cache twin.
+
+Reduced h2o-danube: window 32, ring 128 rows, max_len 256 — so prompts in
+[33, 120] exceed the window and position budgets past 128 wrap the ring.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                                    # pragma: no cover
+    from _hypothesis_compat import given, settings, st
+
+from repro.configs import get_config
+from repro.models.api import build_model
+from repro.serving import ContinuousBatchingEngine, Request, ServingEngine
+
+jax.config.update("jax_platform_name", "cpu")
+
+MAX_LEN = 256
+CFG_FULL = get_config("h2o-danube-1.8b", reduced=True)     # window 32
+CFG_RING = get_config("h2o-danube-1.8b+ring", reduced=True)
+WINDOW = CFG_FULL.window
+MODEL_FULL = build_model(CFG_FULL)
+MODEL_RING = build_model(CFG_RING)
+PARAMS = MODEL_FULL.init_params(jax.random.PRNGKey(0))     # twins share params
+RING_LEN = int(MODEL_RING.init_cache(1, MAX_LEN, None)["k"].shape[2])
+
+
+def _greedy(model, prompt_len: int, steps: int):
+    """Uniform prefill + greedy decode; returns (tokens [steps], logits
+    [steps+1, V]) for a deterministic prompt of ``prompt_len``."""
+    toks = jax.random.randint(jax.random.PRNGKey(prompt_len), (1, prompt_len),
+                              0, CFG_FULL.vocab_size, jnp.int32)
+    cache = model.init_cache(1, MAX_LEN, None)
+    logits, cache = model.prefill(PARAMS, toks, cache)
+    out_t, out_l = [], [logits]
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    for _ in range(steps):
+        out_t.append(int(tok[0]))
+        logits, cache = model.decode_step(PARAMS, tok, cache)
+        out_l.append(logits)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    return out_t, np.asarray(jnp.stack(out_l))
+
+
+def test_ring_is_strictly_smaller_than_the_context():
+    assert RING_LEN == 128 < MAX_LEN
+    assert RING_LEN >= WINDOW + 1
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(min_value=1, max_value=24),
+       st.integers(min_value=1, max_value=8))
+def test_ring_equals_full_twin_unwrapped(prompt_len, steps):
+    """Whenever total length stays within the window the ring holds exactly
+    the positions the full cache attends — logits and tokens coincide."""
+    steps = max(1, min(steps, WINDOW - prompt_len))
+    toks_r, log_r = _greedy(MODEL_RING, prompt_len, steps)
+    toks_f, log_f = _greedy(MODEL_FULL, prompt_len, steps)
+    np.testing.assert_allclose(log_r, log_f, atol=1e-5)
+    assert toks_r == toks_f
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(min_value=WINDOW + 1, max_value=200),
+       st.integers(min_value=1, max_value=16))
+def test_ring_equals_windowed_reference_wrapped(prompt_len, steps):
+    """Prompt > window: the ring drops out-of-window history by overwrite,
+    the full twin by masking — same attended set, same greedy stream. The
+    range runs up to prompts of 200 > ring_len 128, so the high boundary
+    cases wrap the ring during *prefill* as well as during decode."""
+    toks_r, log_r = _greedy(MODEL_RING, prompt_len, steps)
+    toks_f, log_f = _greedy(MODEL_FULL, prompt_len, steps)
+    np.testing.assert_allclose(log_r, log_f, atol=1e-4)
+    assert toks_r == toks_f
+
+
+def test_mid_block_eos_on_wrap_boundary_backfills_exactly():
+    """A request whose EOS lands on the decode tick that writes ring slot 0
+    (the wrap boundary) retires mid-block (decode_ticks=8), and the request
+    backfilled into the freed, already-wrapped slot still reproduces its
+    per-request stream exactly."""
+    prompt_a = np.arange(RING_LEN - 3, dtype=np.int32) % CFG_RING.vocab_size
+    p = len(prompt_a)                               # 125
+    probe = ContinuousBatchingEngine(MODEL_RING, PARAMS, n_slots=1,
+                                     max_len=MAX_LEN, chunk=8)
+    free = probe.run([Request(prompt=prompt_a, max_new_tokens=12,
+                              rid="probe")])
+    toks = free["requests"][0]["tokens"]
+    # emitted token j is produced by the decode write at position p + j - 1;
+    # j = RING_LEN + 1 - p makes that write land on slot 0 — the boundary
+    j = RING_LEN + 1 - p
+    eos = toks[j]
+    assert eos not in toks[:j], "pick a different seed: accidental early EOS"
+
+    prompt_b = (np.arange(60, dtype=np.int32) * 3 + 1) % CFG_RING.vocab_size
+    ref = ServingEngine(MODEL_RING, PARAMS, max_len=MAX_LEN, batch=1)
+    want_b = np.asarray(ref.generate(jnp.asarray(prompt_b)[None],
+                                     steps=4))[0].tolist()
+    assert eos not in want_b, "pick a different prompt_b: contains the EOS"
+
+    eng = ContinuousBatchingEngine(MODEL_RING, PARAMS, n_slots=1,
+                                   max_len=MAX_LEN, chunk=8, eos_id=eos,
+                                   decode_ticks=8)
+    report = eng.run([Request(prompt=prompt_a, max_new_tokens=12, rid="a"),
+                      Request(prompt=prompt_b, max_new_tokens=4, rid="b")])
+    by_rid = {r["rid"]: r for r in report["requests"]}
+    assert by_rid["a"]["tokens"] == toks[:j + 1]    # EOS emitted, then cut
+    assert by_rid["a"]["finish_reason"] == "eos"
+    assert by_rid["b"]["tokens"] == want_b          # exact in a reused slot
+    assert eng.pool.n_free == 1
+
+
+def test_ring_kv_bytes_per_slot_scale_with_ring():
+    """The report's memory line carries the O(window) win: per-slot KV
+    bytes shrink by exactly ring_len / max_len vs the full-cache twin."""
+    def agg(model):
+        eng = ContinuousBatchingEngine(model, PARAMS, n_slots=2,
+                                       max_len=MAX_LEN, chunk=8)
+        return eng.run([Request(prompt=np.arange(40, dtype=np.int32),
+                                max_new_tokens=3, rid="r")])["aggregate"]
+
+    ring, full = agg(MODEL_RING), agg(MODEL_FULL)
+    assert ring["kv_rows_per_slot"] == RING_LEN
+    assert full["kv_rows_per_slot"] == MAX_LEN
+    assert (ring["kv_bytes_per_slot"] * MAX_LEN
+            == full["kv_bytes_per_slot"] * RING_LEN)
+
+
+def test_ring_rejects_oversized_prefill_chunk():
+    """The chunked-prefill exactness bound (ring_len >= window + chunk - 1)
+    is enforced at engine construction, not discovered as corruption."""
+    import pytest
+    with pytest.raises(ValueError, match="ring"):
+        ContinuousBatchingEngine(MODEL_RING, PARAMS, n_slots=1,
+                                 max_len=MAX_LEN, chunk=128)

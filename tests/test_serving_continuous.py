@@ -1,7 +1,9 @@
 """Continuous-batching subsystem: slot-pool invariants, scheduler
-conservation, post-EOS pad emission, and end-to-end greedy equivalence of
-continuous batching vs per-request lock-step generation — across the dense,
-recurrent-state (ssm / hybrid), and MoE families."""
+conservation, post-EOS pad emission, and engine mechanics (EOS backfill,
+capacity rejection, construction-time gates). The per-family equivalence
+sweep — greedy continuous == per-request generation for every config
+claiming ``supports_ragged_serving()``, including the ring-KV variants —
+lives in the shared harness of ``test_serving_conformance.py``."""
 from __future__ import annotations
 
 import jax
@@ -9,7 +11,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import ARCH_IDS, get_config
+from repro.configs import get_config
 from repro.models.api import build_model
 from repro.serving import (ContinuousBatchingEngine, KVSlotPool, Request,
                            Scheduler, ServingEngine, SlotPoolError,
@@ -145,43 +147,9 @@ def test_lockstep_post_eos_emits_pad(dense_model):
 
 
 # ---------------------------------------------------------------------------
-# continuous engine: end-to-end
+# continuous engine: end-to-end mechanics (the per-family equivalence sweep
+# lives in test_serving_conformance.py)
 # ---------------------------------------------------------------------------
-
-@pytest.mark.parametrize("arch", ["llama2-7b",       # MHA dense
-                                  "qwen3-8b",        # GQA + qk_norm
-                                  "h2o-danube-1.8b",  # GQA + SWA window
-                                  "rwkv6-3b",        # ssm: pure recurrent
-                                  "hymba-1.5b",      # hybrid: attn + mamba
-                                  "olmoe-1b-7b",     # MoE top-8 + qk_norm
-                                  ])
-def test_continuous_matches_per_request_greedy(arch, dense_model):
-    """Every request's continuous-batching output must equal its
-    single-request lock-step generation token-for-token (greedy)."""
-    if arch == "llama2-7b":
-        cfg, model, params = dense_model
-    else:
-        cfg = get_config(arch, reduced=True)
-        model = build_model(cfg)
-        params = model.init_params(jax.random.PRNGKey(0))
-    trace = poisson_trace(n_requests=6, vocab_size=cfg.vocab_size,
-                          prompt_len=(3, 18), max_new=(3, 12), seed=11)
-    eng = ContinuousBatchingEngine(model, params, n_slots=2, max_len=64,
-                                   chunk=8)
-    report = eng.run(list(trace))
-    agg = report["aggregate"]
-    assert agg["n_retired"] == 6 and agg["n_rejected"] == 0
-    assert eng.pool.n_free == 2                   # all slots returned
-    assert eng.pool.total_allocs == eng.pool.total_releases == 6
-
-    ref_eng = ServingEngine(model, params, max_len=64, batch=1)
-    by_rid = {r["rid"]: r for r in report["requests"]}
-    for req in trace:
-        ref = np.asarray(ref_eng.generate(
-            jnp.asarray(req.prompt)[None], steps=req.max_new_tokens))[0]
-        assert by_rid[req.rid]["tokens"] == ref.tolist(), req.rid
-        assert by_rid[req.rid]["finish_reason"] == "max_tokens"
-
 
 def test_continuous_eos_retires_early_and_backfills(dense_model):
     cfg, model, params = dense_model
@@ -214,46 +182,24 @@ def test_continuous_respects_slot_capacity(dense_model):
     assert st.status == "rejected"                 # 38 rows > capacity 31
 
 
-def test_continuous_gates_unsupported_families():
-    # ring KV cache: the parked masked write would land on a live ring slot
-    cfg = get_config("h2o-danube-1.8b", reduced=True).replace(kv_ring=True)
+def test_continuous_gates_cross_attention_only():
+    """Ring KV caches are no longer gated: the parked write that used to
+    need a reserved tail row is a per-slot write mask now, so an SWA arch
+    with kv_ring constructs (and serves — test_serving_conformance.py runs
+    the full equivalence harness over the +ring variants). The one
+    remaining gate is cross-attention stacks, whose per-slot source KV
+    would need its own pool."""
+    cfg = get_config("h2o-danube-1.8b+ring", reduced=True)
     model = build_model(cfg)
     params = model.init_params(jax.random.PRNGKey(0))
-    with pytest.raises(ValueError):
-        ContinuousBatchingEngine(model, params, n_slots=2, max_len=32,
-                                 chunk=8)
+    eng = ContinuousBatchingEngine(model, params, n_slots=2, max_len=256,
+                                   chunk=8)                # constructs fine
+    assert eng.cache["k"].shape[2] == 128 < 256            # O(window) rows
     # audio (encoder-decoder cross-attention): per-slot source KV unpooled
     wcfg = get_config("whisper-small", reduced=True)
     wmodel = build_model(wcfg)
     with pytest.raises(ValueError):
         ContinuousBatchingEngine(wmodel, {}, n_slots=2, max_len=32, chunk=8)
-
-
-def test_ragged_serving_claims_hold():
-    """Every config that claims ``supports_ragged_serving()`` must actually
-    serve a tiny ragged trace (no NotImplementedError mid-flight — CI fails
-    on a claim the model layer can't back); every config that doesn't claim
-    it must be rejected at engine construction."""
-    for arch in ARCH_IDS:
-        cfg = get_config(arch, reduced=True)
-        model = build_model(cfg)
-        claims = getattr(model, "supports_ragged_serving", lambda: False)()
-        if not claims:
-            with pytest.raises(ValueError):
-                ContinuousBatchingEngine(model, {}, n_slots=2, max_len=32,
-                                         chunk=8)
-            continue
-        params = model.init_params(jax.random.PRNGKey(0))
-        eng = ContinuousBatchingEngine(model, params, n_slots=2, max_len=32,
-                                       chunk=8)
-        report = eng.run([
-            Request(prompt=np.arange(1, 6, dtype=np.int32),
-                    max_new_tokens=3, rid="a"),
-            Request(prompt=np.arange(2, 12, dtype=np.int32),
-                    max_new_tokens=2, rid="b"),
-        ])
-        assert report["aggregate"]["n_retired"] == 2, arch
-        assert all(r["n_tokens"] > 0 for r in report["requests"]), arch
 
 
 def test_fused_sampler_seeded_reproducible(dense_model):
