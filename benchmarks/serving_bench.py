@@ -22,16 +22,29 @@ Both engines run the same jit'd model; tokens are counted as each request's
 ``max_new_tokens`` (useful tokens only — lock-step's over-generated padding
 rows don't count). Emits a ``BENCH_serving.json`` summary.
 
+Cross-attention archs (whisper-small, llama-3.2-vision-90b) get a mixed
+trace of source-bearing requests with **heterogeneous source lengths**
+(``--source-min/--source-max``) and shared source ids
+(``--source-share N``: N consecutive requests per source — think N
+questions about one image). The continuous engine serves them through the
+source-KV pool (one encoder ingest per distinct source id, refcount-shared;
+``source_ingests`` / ``source_shares`` land in the JSON) while lock-step
+re-encodes per group — both paths mask per-row source lengths, so rows with
+different encoder lengths batch together on either engine.
+
 ``--arch`` takes a comma-separated list (the JSON becomes a list of per-arch
 results), and ``--verify`` re-checks the continuous engine's greedy outputs
-token-for-token against per-request ``ServingEngine.generate`` — the
-per-request-equivalence contract that covers the recurrent-state
-(rwkv6-3b, hymba-1.5b) and MoE (olmoe-1b-7b) families and holds at every
-tick horizon.
+token-for-token against per-request ``ServingEngine.generate`` (each
+cross-attention request replayed with its own padded + length-masked
+source) — the per-request-equivalence contract that covers the
+recurrent-state (rwkv6-3b, hymba-1.5b) and MoE (olmoe-1b-7b) families and
+holds at every tick horizon.
 
     PYTHONPATH=src python benchmarks/serving_bench.py --reduced
     PYTHONPATH=src python benchmarks/serving_bench.py --reduced --verify \
         --arch rwkv6-3b,hymba-1.5b,olmoe-1b-7b --decode-ticks 8
+    PYTHONPATH=src python benchmarks/serving_bench.py --reduced --verify \
+        --arch whisper_small --json BENCH_serving_xattn.json
 """
 from __future__ import annotations
 
@@ -46,21 +59,48 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.models.api import build_model
+from repro.models.api import build_model, needs_source
 from repro.serving import ContinuousBatchingEngine, ServingEngine, poisson_trace
 
 SPEEDUP_TARGET = 1.3
 
 
+def _padded_sources(group, src_max, d_model, n_rows):
+    """Right-pad a group's heterogeneous sources to [n_rows, src_max, d]
+    plus the [n_rows] true lengths (lock-step's uniform-shape form of what
+    the continuous engine masks per slot)."""
+    src = np.zeros((n_rows, src_max, d_model), np.float32)
+    lens = np.zeros((n_rows,), np.int32)
+    for j, r in enumerate(group):
+        if r.source is not None:
+            src[j, :len(r.source)] = r.source
+            lens[j] = len(r.source)
+    return jnp.asarray(src), jnp.asarray(lens)
+
+
 def lockstep_runner(model, params, trace, *, n_slots, max_len, pad_id=0):
     """One timed lock-step pass: FIFO groups of ``n_slots``, prompts padded
     to the trace-wide max (one prefill compile), each group decoding
-    max(max_new) steps. Returns a closure so passes can interleave with the
-    continuous engine's (shared host-load phases hit both fairly)."""
-    eng = ServingEngine(model, params, max_len=max_len, batch=n_slots)
+    max(max_new) steps. Cross-attention traces pad each group's sources to
+    the pool row size and mask per-row lengths (and the encoder reruns per
+    group even when requests share a source — the padding + convoy +
+    re-encode waste continuous batching removes). Returns a closure so
+    passes can interleave with the continuous engine's (shared host-load
+    phases hit both fairly)."""
+    cfg = model.cfg
+    with_src = needs_source(cfg) and any(r.source is not None for r in trace)
+    src_max = cfg.source_len if with_src else None
+    eng = ServingEngine(model, params, max_len=max_len, batch=n_slots,
+                        source_len=src_max)
     pmax = max(len(r.prompt) for r in trace)
+    warm_kw = {}
+    if with_src:
+        warm_kw = dict(source=jnp.zeros((n_slots, src_max, cfg.d_model),
+                                        jnp.float32),
+                       source_len=jnp.zeros((n_slots,), jnp.int32))
     # warmup/compile with the shapes the timed loop uses
-    eng.generate(jnp.full((n_slots, pmax), pad_id, jnp.int32), steps=2)
+    eng.generate(jnp.full((n_slots, pmax), pad_id, jnp.int32), steps=2,
+                 **warm_kw)
 
     def one_pass():
         t0 = time.perf_counter()
@@ -70,8 +110,12 @@ def lockstep_runner(model, params, trace, *, n_slots, max_len, pad_id=0):
             prompts = np.full((n_slots, pmax), pad_id, np.int32)
             for j, r in enumerate(group):
                 prompts[j, :len(r.prompt)] = r.prompt  # right-pad to uniform
+            kw = {}
+            if with_src:
+                kw["source"], kw["source_len"] = _padded_sources(
+                    group, src_max, cfg.d_model, n_slots)
             steps = max(r.max_new_tokens for r in group)
-            out = eng.generate(jnp.asarray(prompts), steps=steps)
+            out = eng.generate(jnp.asarray(prompts), steps=steps, **kw)
             jax.block_until_ready(out)
             useful += sum(r.max_new_tokens for r in group)
         wall = time.perf_counter() - t0
@@ -101,13 +145,22 @@ def continuous_runner(model, params, trace, *, n_slots, max_len, chunk, seed,
 
 def verify_equivalence(model, params, trace, report, *, max_len) -> list:
     """Greedy continuous-batching outputs must equal per-request lock-step
-    generation token-for-token; returns the rids that differ."""
-    ref = ServingEngine(model, params, max_len=max_len, batch=1)
+    generation token-for-token; returns the rids that differ. Cross-
+    attention requests replay each with its own (padded + length-masked)
+    source, so heterogeneous-source batching must also be invisible."""
+    cfg = model.cfg
+    with_src = needs_source(cfg) and any(r.source is not None for r in trace)
+    ref = ServingEngine(model, params, max_len=max_len, batch=1,
+                        source_len=cfg.source_len if with_src else None)
     by_rid = {r["rid"]: r for r in report["requests"]}
     bad = []
     for req in trace:
+        kw = {}
+        if with_src and req.source is not None:
+            kw["source"], kw["source_len"] = _padded_sources(
+                [req], cfg.source_len, cfg.d_model, 1)
         want = np.asarray(ref.generate(jnp.asarray(req.prompt)[None],
-                                       steps=req.max_new_tokens))[0]
+                                       steps=req.max_new_tokens, **kw))[0]
         if by_rid[req.rid]["tokens"] != want.tolist():
             bad.append(req.rid)
     return bad
@@ -144,6 +197,17 @@ def main(argv=None) -> int:
     ap.add_argument("--gen-min", type=int, default=4)
     ap.add_argument("--gen-max", type=int, default=128)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--source-min", type=int, default=0,
+                    help="cross-attention archs: min source rows per "
+                         "request (default: source_len // 4)")
+    ap.add_argument("--source-max", type=int, default=0,
+                    help="cross-attention archs: max source rows per "
+                         "request (default: the config's source_len)")
+    ap.add_argument("--source-share", type=int, default=2,
+                    help="cross-attention archs: consecutive requests "
+                         "sharing one source id (the pool serves shares "
+                         "by refcount — source_ingests/source_shares in "
+                         "the JSON); 1 disables sharing")
     ap.add_argument("--decode-ticks", type=int, default=8,
                     help="fused decode ticks per dispatch (K): the host "
                          "syncs once per K tokens; on-device retirement "
@@ -176,10 +240,23 @@ def run_arch(arch: str, args) -> tuple[dict, int]:
     cfg = get_config(arch, reduced=args.reduced)
     model = build_model(cfg)
     params = model.init_params(jax.random.PRNGKey(0))
+    src_kw, src_range = {}, None
+    if needs_source(cfg):
+        # cross-attention trace: heterogeneous source lengths + shared
+        # source ids, the mixed shape vision/audio traffic has. Clamped to
+        # the config's source_len (the pool row size): an oversized source
+        # would be rejected by the continuous engine and overflow the
+        # lock-step padding — infeasible on both engines, so it never
+        # enters the trace (mirrors the prompt-budget feasibility filter)
+        hi = min(args.source_max or cfg.source_len, cfg.source_len)
+        src_range = (min(args.source_min or max(1, cfg.source_len // 4), hi),
+                     hi)
+        src_kw = dict(source_len=src_range, source_dim=cfg.d_model,
+                      source_share=args.source_share)
     trace = poisson_trace(
         n_requests=args.requests, vocab_size=cfg.vocab_size,
         prompt_len=(args.prompt_min, args.prompt_max),
-        max_new=(args.gen_min, args.gen_max), seed=args.seed)
+        max_new=(args.gen_min, args.gen_max), seed=args.seed, **src_kw)
     # both engines must see the identical feasible workload: a request the
     # continuous engine would reject (slot capacity), or whose budget plus
     # the trace-wide padded prompt trips lock-step's p + steps <= max_len
@@ -221,6 +298,10 @@ def run_arch(arch: str, args) -> tuple[dict, int]:
     print(f"  kv cache:   {cont['kv_bytes_per_slot']} B/slot "
           f"({cont['kv_rows_per_slot']} rows/slot, max_len "
           f"{cont['max_len']})")
+    if "source_ingests" in cont:
+        print(f"  source kv:  {cont['source_ingests']} ingests, "
+              f"{cont['source_shares']} shares "
+              f"({cont['src_rows_per_entry']} rows/entry)")
 
     speedup = round(cont["tokens_per_s"] / lock["tokens_per_s"], 3)
     status = "PASS" if speedup >= SPEEDUP_TARGET else "MISS"
@@ -235,6 +316,8 @@ def run_arch(arch: str, args) -> tuple[dict, int]:
         "decode_ticks": args.decode_ticks,
         "prompt_len": [args.prompt_min, args.prompt_max],
         "max_new": [args.gen_min, args.gen_max],
+        **({"source_len": list(src_range),
+            "source_share": args.source_share} if src_range else {}),
         "lockstep": lock, "continuous": cont,
         "speedup_tokens_per_s": speedup,
         "speedup_target": SPEEDUP_TARGET,

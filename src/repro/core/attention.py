@@ -118,6 +118,55 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     return out.reshape(b, hq, d)
 
 
+def decode_cross_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                           entries: jax.Array, lengths: jax.Array, *,
+                           impl: DecodeImpl = "blockwise",
+                           block_size: int = 512,
+                           scale: float | None = None) -> jax.Array:
+    """Ragged cross-attention decode read over a shared **source-KV pool**.
+
+    q: [B, Hq, D] (one decoder token per slot); k_pool / v_pool:
+    [E, S_src, Hkv, D] — E pooled encoder-side entries, NOT batched by slot;
+    entries: [B] int32 maps each slot to its pool entry (requests sharing a
+    source id share an entry — the :class:`repro.serving.slot_pool.
+    SourceKVPool` contract); lengths: [B] int32 per-slot valid source
+    prefix. Rows with *different* encoder lengths (and different entries)
+    coexist in one static-shape dispatch: each row masks its own tail, a
+    ``length == 0`` row (no source / inactive slot) reads an exact zero.
+
+    Non-causal, unwindowed, and read-only — nothing is written back, which
+    is what lets the pool be shared. The blockwise path folds the entry
+    index into the KV block reads (``swiftkv_decode_pooled``), so no
+    per-slot copy of the pool is ever materialized. ``tokenwise`` / ``sp``
+    / ``kernel`` have no pooled form and fall back to blockwise; ``naive``
+    gathers the per-slot entries and runs the dense oracle."""
+    b, hq, d = q.shape
+    hkv = k_pool.shape[2]
+    assert hq % hkv == 0, (hq, hkv)
+    g = hq // hkv
+    entries = jnp.asarray(entries, jnp.int32)
+    lengths = jnp.asarray(lengths, jnp.int32)
+
+    if impl == "naive":
+        # dense oracle: gather each slot's entry, then the batched reference
+        kc = jnp.take(k_pool, entries, axis=0)           # [B, S, Hkv, D]
+        vc = jnp.take(v_pool, entries, axis=0)
+        return decode_attention(q, kc, vc, lengths, impl="naive", scale=scale)
+
+    qg = q.reshape(b, hkv, g, d)
+    kp = jnp.swapaxes(k_pool, 1, 2)                      # [E, Hkv, S, D]
+    vp = jnp.swapaxes(v_pool, 1, 2)
+    fn = functools.partial(swiftkv.swiftkv_decode_pooled,
+                           block_size=block_size, scale=scale)
+    # vmap: queries within a group share one pooled scan; the pool itself is
+    # broadcast (in_axes None) — only (q, entry, length) are per-row
+    per_group = jax.vmap(fn, in_axes=(0, None, None, None, None))  # over G
+    per_head = jax.vmap(per_group, in_axes=(0, 1, 1, None, None))  # over Hkv
+    per_batch = jax.vmap(per_head, in_axes=(0, None, None, 0, 0))  # over B
+    out = per_batch(qg, kp, vp, entries, lengths)        # [B, Hkv, G, D]
+    return out.reshape(b, hq, d)
+
+
 def decode_attention_ring(q: jax.Array, k_cache: jax.Array,
                           v_cache: jax.Array, lengths: jax.Array, *,
                           window: int, scale: float | None = None) -> jax.Array:

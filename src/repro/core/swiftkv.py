@@ -231,6 +231,62 @@ def swiftkv_decode_blockwise(q: jax.Array, k: jax.Array, v: jax.Array,
     return state_finalize(state).astype(q.dtype)
 
 
+def swiftkv_decode_pooled(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                          entry: jax.Array, length: jax.Array, *,
+                          block_size: int = 512,
+                          scale: float | None = None) -> jax.Array:
+    """Blockwise single-pass SwiftKV decode reading one entry of a shared
+    **source-KV pool** — the ragged cross-attention read.
+
+    q: [D]; k_pool, v_pool: [E, S, D] (E pooled entries of S rows each);
+    ``entry``: which entry this query reads; ``length``: the entry's valid
+    prefix (heterogeneous per batch row under the ``decode_cross_attention``
+    vmap — rows with different encoder lengths coexist in one static-shape
+    dispatch, each masking its own tail). The entry index is folded into
+    the block loop's ``dynamic_slice`` start, so the read streams straight
+    out of the pool — no per-step gather materializing a per-slot copy of
+    the pool first. Cross-attention is non-causal and unwindowed: validity
+    is just ``t < length``, and a ``length == 0`` row (no source) folds
+    zero blocks and finalizes to an exact zero output.
+
+    Same ``(mu, Z, Y)`` recurrence, same exactly-once single pass, same
+    length-adaptive trip count as :func:`swiftkv_decode_blockwise` — the
+    loop runs ``cdiv(length, block_size)`` iterations, so a short source
+    costs attention work proportional to its own length, not the pool
+    allocation."""
+    d = q.shape[-1]
+    s_pool = k_pool.shape[1]
+    scale = (1.0 / jnp.sqrt(d)) if scale is None else scale
+    length = jnp.asarray(length, jnp.int32)
+    entry = jnp.asarray(entry, jnp.int32)
+    n_blocks = -(-s_pool // block_size)
+    pad = n_blocks * block_size - s_pool
+    if pad:
+        k_pool = jnp.pad(k_pool, ((0, 0), (0, pad), (0, 0)))
+        v_pool = jnp.pad(v_pool, ((0, 0), (0, pad), (0, 0)))
+    qf = q.astype(jnp.float32)
+
+    def body(i, state):
+        start = i * block_size
+        k_blk = jax.lax.dynamic_slice(
+            k_pool, (entry, start, 0), (1, block_size, d))[0].astype(jnp.float32)
+        v_blk = jax.lax.dynamic_slice(
+            v_pool, (entry, start, 0), (1, block_size, d))[0].astype(jnp.float32)
+        t = start + jnp.arange(block_size)
+        valid = t < length
+        s_blk = (k_blk @ qf) * scale  # [Bk]
+        return state_update_block(state, s_blk, v_blk, valid.astype(jnp.float32))
+
+    init = state_init(v_pool.shape[-1])
+    if n_blocks == 1:
+        state = body(0, init)
+    else:
+        n_live = jnp.minimum(n_blocks,
+                             (length + block_size - 1) // block_size)
+        state = jax.lax.fori_loop(0, n_live, body, init)
+    return state_finalize(state).astype(q.dtype)
+
+
 def swiftkv_decode_sharded_reference(q, k_shards, v_shards, lengths):
     """Pure-function model of sequence-parallel SwiftKV decode: fold each KV
     shard independently, then tree-merge the partial states. Used to prove the

@@ -6,19 +6,23 @@ Two modes over host devices (reduced configs) or a production mesh:
   prompts, prefill once, decode in lock-step. The decode step is the unit
   the dry-run lowers for the ``decode_*`` shape cells.
 * **continuous** (``--continuous``) — the ragged continuous-batching
-  subsystem (``repro.serving.continuous``): KV slot pool + request
-  scheduler + chunked slot prefill + multi-tick decode blocks
+  subsystem (``repro.serving.continuous``): KV slot pool + source-KV pool +
+  request scheduler + chunked slot prefill + multi-tick decode blocks
   (``--decode-ticks``), driven by a Poisson or file trace, with per-request
   TTFT / inter-token latency, slot-occupancy, and dispatch-accounting
   metrics.
-  Covers the dense-KV, recurrent-state (ssm / hybrid: rwkv6-3b,
-  hymba-1.5b), and MoE (olmoe-1b-7b, llama4-scout) families; only
-  cross-attention stacks (vlm / audio) and ring-KV configs stay lock-step.
+  Covers **every** family: dense-KV, ring-KV SWA (``<arch>+ring``),
+  recurrent-state (ssm / hybrid: rwkv6-3b, hymba-1.5b), MoE (olmoe-1b-7b,
+  llama4-scout), and cross-attention stacks (vlm / audio: whisper-small,
+  llama-3.2-vision-90b — Poisson traces get heterogeneous-length sources
+  with shared source ids, served through the source-KV pool).
 
     PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --reduced \
         --batch 4 --prompt-len 32 --gen 64
     PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-3b --reduced \
         --continuous --requests 16 --n-slots 4 --max-len 256
+    PYTHONPATH=src python -m repro.launch.serve --arch whisper-small \
+        --reduced --continuous --requests 8 --n-slots 2 --max-len 64
 """
 from __future__ import annotations
 
@@ -56,7 +60,8 @@ def main(argv=None):
     # --- continuous batching ---
     ap.add_argument("--continuous", action="store_true",
                     help="ragged continuous batching over a request trace "
-                         "(dense, ssm, hybrid, and MoE families)")
+                         "(every family: dense, ring, ssm, hybrid, MoE, "
+                         "and cross-attention via the source-KV pool)")
     ap.add_argument("--n-slots", type=int, default=0,
                     help="KV slot pool size (default: --batch)")
     ap.add_argument("--requests", type=int, default=16,
@@ -137,11 +142,18 @@ def _run_continuous(args, cfg, model, params, mesh):
     if args.trace:
         trace = load_trace(args.trace, cfg.vocab_size)
     else:
+        src_kw = {}
+        if needs_source(cfg):
+            # cross-attention stacks: heterogeneous source lengths + a
+            # shared source id every other pair (source-KV pool dedup)
+            src_kw = dict(source_len=(max(1, cfg.source_len // 4),
+                                      cfg.source_len),
+                          source_dim=cfg.d_model, source_share=2)
         trace = poisson_trace(
             n_requests=args.requests, vocab_size=cfg.vocab_size,
             rate=args.rate, prompt_len=(min(8, args.prompt_len),
                                         args.prompt_len),
-            max_new=(min(4, args.gen), args.gen), seed=args.seed)
+            max_new=(min(4, args.gen), args.gen), seed=args.seed, **src_kw)
 
     with mesh:
         eng = ContinuousBatchingEngine(

@@ -221,13 +221,19 @@ class TransformerLM:
                 jnp.zeros((), jnp.float32))
 
     def _self_attn_full(self, p: Params, x: jax.Array,
-                        positions: jax.Array) -> jax.Array:
-        """Full-sequence self attention (training / encoder)."""
+                        positions: jax.Array,
+                        kv_length: jax.Array | None = None) -> jax.Array:
+        """Full-sequence self attention (training / encoder). ``kv_length``:
+        optional [B] valid prefix — a bidirectional encoder run over padded
+        inputs masks keys past each row's true length so valid positions'
+        outputs are independent of the padding (queries at padded positions
+        produce garbage that downstream reads mask out)."""
         cfg = self.cfg
         b, s, _ = x.shape
         q, k, v = self._qkv_rope(p, x, positions)
         out = attn_lib.prefill_attention(q, k, v, causal=self.causal,
                                          window=cfg.window,
+                                         kv_lengths=kv_length,
                                          kv_block=cfg.attn_block or 512)
         return linear(p, "wo", out.reshape(b, s, -1))
 
@@ -273,10 +279,12 @@ class TransformerLM:
 
     # ---- full-sequence blocks (training / prefill math) --------------------
     def _self_block(self, p: Params, x: jax.Array, positions: jax.Array,
-                    source: jax.Array | None) -> tuple[jax.Array, jax.Array]:
+                    source: jax.Array | None,
+                    kv_length: jax.Array | None = None
+                    ) -> tuple[jax.Array, jax.Array]:
         cfg = self.cfg
         h = rms_norm(x, p["ln1"], cfg.norm_eps)
-        attn_out = self._self_attn_full(p["attn"], h, positions)
+        attn_out = self._self_attn_full(p["attn"], h, positions, kv_length)
         if cfg.family == "hybrid":
             mamba_out = mamba_lib.mamba_forward(p["mamba"], h)
             mixed = 0.5 * (rms_norm(attn_out, p["ln_attn_out"], cfg.norm_eps)
@@ -291,10 +299,11 @@ class TransformerLM:
         return self._seq_shard(x + y), aux
 
     def _cross_block(self, p: Params, x: jax.Array,
-                     source: jax.Array) -> jax.Array:
+                     source: jax.Array | None) -> jax.Array:
         cfg = self.cfg
-        h = rms_norm(x, p["ln1"], cfg.norm_eps)
-        x = x + self._cross_attn_full(p["cross"], h, source)
+        if source is not None:
+            h = rms_norm(x, p["ln1"], cfg.norm_eps)
+            x = x + self._cross_attn_full(p["cross"], h, source)
         h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
         return self._seq_shard(x + mlp_apply(p["ffn"], h2, cfg.act,
                                              cfg.gated_mlp))
@@ -303,9 +312,12 @@ class TransformerLM:
     def forward(self, params: Params, tokens: jax.Array | None = None, *,
                 embeds: jax.Array | None = None,
                 source: jax.Array | None = None,
+                kv_length: jax.Array | None = None,
                 remat: bool = True) -> tuple[jax.Array, jax.Array]:
         """Returns (hidden-or-logits [B,S,*], moe aux loss). ``tokens`` XOR
-        ``embeds``; ``source``: [B, S_src, d] stub-frontend features."""
+        ``embeds``; ``source``: [B, S_src, d] stub-frontend features;
+        ``kv_length``: [B] valid input prefix for masked (padded) encoder
+        runs — see :meth:`_self_attn_full`."""
         cfg = self.cfg
         x = (params["embed"].astype(self._dt)[tokens] if embeds is None
              else embeds.astype(self._dt))
@@ -320,7 +332,7 @@ class TransformerLM:
 
             def self_step(carry, bp):
                 x, aux = carry
-                x, a = self._self_block(bp, x, positions, source)
+                x, a = self._self_block(bp, x, positions, source, kv_length)
                 return (x, aux + a), None
 
             step = make_remat(cfg)(self_step) if remat else self_step
@@ -388,10 +400,30 @@ class TransformerLM:
     # Serving: KV cache init / prefill / decode_step
     # =======================================================================
     def init_cache(self, batch: int, max_len: int,
-                   source_len: int | None = None) -> Cache:
+                   source_len: int | None = None, *,
+                   n_sources: int | None = None,
+                   chunk: int | None = None) -> Cache:
         """Preallocated decode state. KV tensors [L, B, Smax, Hkv, Dh] in the
         compute dtype; per-row lengths; incremental-RoPE angle state (Eq. 11);
-        family-specific recurrent states."""
+        family-specific recurrent states.
+
+        Cross-attention source KV comes in two forms. ``source_len`` alone
+        (lock-step serving) allocates per-row ``cross_k/cross_v``
+        ``[Lc, B, S_src, Hkv, Dh]`` + per-row ``source_len``, filled by
+        ``prefill``. ``n_sources`` (continuous serving) instead allocates a
+        **pooled** form: ``src_k/src_v [Lc, n_sources, S_src, Hkv, Dh]``
+        entries shared across slots, ``src_len [n_sources]`` valid prefixes,
+        and ``src_index [B]`` mapping each slot to its entry — written once
+        per source by :meth:`ingest_source`, read-only at decode
+        (``repro.serving.slot_pool.SourceKVPool`` owns the host ledger).
+
+        ``chunk``: the serving engine's prefill chunk size. Ring caches use
+        it to size the ring as ``round128(window + chunk)`` so the chunked-
+        prefill exactness bound ``ring_len >= window + chunk - 1`` holds by
+        construction — a window just under a 128 boundary no longer forces
+        the engine to reject large chunks (the ring simply takes the next
+        128 step, degenerating to the full cache when that reaches
+        ``max_len``)."""
         cfg = self.cfg
         dh = cfg.resolved_head_dim
         dt = self._dt
@@ -410,12 +442,14 @@ class TransformerLM:
         if cfg.kv_ring and cfg.window:
             # ring cache: ~window slots regardless of context (SWA archs).
             # Decode needs ring_len >= window + 1 (the new token's write
-            # must only ever evict the position leaving the window); the
-            # 128-rounding keeps the sublane dimension aligned AND leaves
-            # the slack chunked serving needs (prefill_chunk requires
-            # ring_len >= window + chunk - 1 — enforced by the continuous
-            # engine at construction, where chunk is known)
-            kv_len = min(max_len, -(-(cfg.window + 1) // 128) * 128)
+            # must only ever evict the position leaving the window); chunked
+            # serving additionally needs ring_len >= window + chunk - 1 for
+            # prefill exactness under wraparound, so when the caller passes
+            # its chunk the ring is sized round128(window + chunk) and the
+            # bound holds by construction. The 128-rounding keeps the
+            # sublane dimension aligned either way.
+            want = cfg.window + (chunk if chunk else 1)
+            kv_len = min(max_len, -(-want // 128) * 128)
         if cfg.decode_impl == "kernel":
             # kernel-path alignment contract (kernels/swiftkv_decode/ops.py):
             # the cache streams zero-copy through BlockSpec index maps, so
@@ -440,7 +474,15 @@ class TransformerLM:
                 (n_self, batch, d_inner, cfg.ssm_state), jnp.float32)
         n_cross_kv = (n_cross if cfg.cross_attn_every > 1
                       else (cfg.n_layers if cfg.cross_attn_every == 1 else 0))
-        if n_cross_kv and source_len:
+        if n_cross_kv and source_len and n_sources:
+            # pooled source KV (continuous serving): entries keyed by source
+            # id on the host side, shared read-only across slots
+            cache["src_k"] = jnp.zeros(
+                (n_cross_kv, n_sources, source_len, cfg.n_kv_heads, dh), dt)
+            cache["src_v"] = jnp.zeros_like(cache["src_k"])
+            cache["src_len"] = jnp.zeros((n_sources,), jnp.int32)
+            cache["src_index"] = jnp.zeros((batch,), jnp.int32)
+        elif n_cross_kv and source_len:
             cache["cross_k"] = jnp.zeros(
                 (n_cross_kv, batch, source_len, cfg.n_kv_heads, dh), dt)
             cache["cross_v"] = jnp.zeros_like(cache["cross_k"])
@@ -554,6 +596,9 @@ class TransformerLM:
 
     def _decode_cross_attn(self, p: Params, h: jax.Array, ck, cv,
                            source_len: jax.Array) -> jax.Array:
+        """Per-row (lock-step) cross read: ck/cv are [B, S_src, Hkv, Dh]
+        caches written by :meth:`prefill`; ``source_len`` [B] masks each
+        row's padded source tail."""
         cfg = self.cfg
         b, d = h.shape
         dh = cfg.resolved_head_dim
@@ -564,6 +609,30 @@ class TransformerLM:
         out = attn_lib.decode_attention(q, ck, cv, source_len,
                                         impl=impl,
                                         block_size=cfg.attn_block or 512)
+        out = linear(p, "wo", out.reshape(b, -1))
+        return jnp.tanh(p["gate"]).astype(h.dtype) * out
+
+    def _decode_cross_attn_pooled(self, p: Params, h: jax.Array, sk, sv,
+                                  entries: jax.Array,
+                                  src_len: jax.Array) -> jax.Array:
+        """Pooled (continuous-serving) cross read: sk/sv are one layer's
+        slice of the source-KV pool, ``[n_entries, S_src, Hkv, Dh]`` —
+        shared across slots, NOT batched — and ``entries``/``src_len`` map
+        each slot to its entry and that entry's valid source prefix. The
+        blockwise read streams each row's entry straight out of the pool
+        (``swiftkv_decode_pooled``); a ``src_len == 0`` row (no source, or
+        a freed slot pointing at a zeroed entry) reads an exact zero, so
+        the gated output vanishes for it."""
+        cfg = self.cfg
+        b, d = h.shape
+        dh = cfg.resolved_head_dim
+        q = linear(p, "wq", h).reshape(b, cfg.n_heads, dh)
+        if cfg.qk_norm:
+            q = rms_norm(q, p["qn"], cfg.norm_eps)
+        impl = ("naive" if cfg.decode_impl == "naive" else "blockwise")
+        out = attn_lib.decode_cross_attention(
+            q, sk, sv, entries, jnp.take(src_len, entries), impl=impl,
+            block_size=cfg.attn_block or 512)
         out = linear(p, "wo", out.reshape(b, -1))
         return jnp.tanh(p["gate"]).astype(h.dtype) * out
 
@@ -589,7 +658,14 @@ class TransformerLM:
                            + rms_norm(m_out, bp["ln_mamba_out"], cfg.norm_eps))
         else:
             x = x + attn_out
-        if "cross" in bp and "cross_k" in slices:
+        if "cross" in bp and "src_k" in slices:
+            # pooled source KV (continuous serving): read-only, per-slot
+            # entry indirection via cache["src_index"]
+            hc = rms_norm(x, bp["ln_cross"], cfg.norm_eps)
+            x = x + self._decode_cross_attn_pooled(
+                bp["cross"], hc, slices["src_k"], slices["src_v"],
+                cache["src_index"], cache["src_len"])
+        elif "cross" in bp and "cross_k" in slices:
             hc = rms_norm(x, bp["ln_cross"], cfg.norm_eps)
             x = x + self._decode_cross_attn(bp["cross"], hc, slices["cross_k"],
                                             slices["cross_v"],
@@ -624,7 +700,12 @@ class TransformerLM:
         SWA configs) have no parking row either — every ring slot is, or
         wraps into, a live window position — so their inactive rows park
         via a per-slot write *mask* (:meth:`_write_kv` ``active=``), the
-        row rewriting its old value in place. The per-row incremental-RoPE
+        row rewriting its old value in place. Cross-attention source KV
+        needs no parking at all: the pooled ``src_k/src_v`` entries are
+        read-only at decode (each row reads its ``src_index`` entry masked
+        to that entry's ``src_len``; an inactive row's read is discarded),
+        so nothing an inactive row does can corrupt shared source state.
+        The per-row incremental-RoPE
         state still advances for every row; a slot's state is reseeded by
         ``finalize_slot`` when a new request fills it."""
         cfg = self.cfg
@@ -645,21 +726,41 @@ class TransformerLM:
             self_slices["mamba_conv"] = cache["mamba_conv"]
             self_slices["mamba_ssm"] = cache["mamba_ssm"]
         if cfg.cross_attn_every == 1:                  # whisper-style
-            self_slices["cross_k"] = cache["cross_k"]
-            self_slices["cross_v"] = cache["cross_v"]
+            if "src_k" in cache:                       # pooled source KV
+                self_slices["src_k"] = cache["src_k"]
+                self_slices["src_v"] = cache["src_v"]
+            elif "cross_k" in cache:                   # per-row (lock-step)
+                self_slices["cross_k"] = cache["cross_k"]
+                self_slices["cross_v"] = cache["cross_v"]
+            # neither: no source was ever provided — cross-attn contributes
+            # nothing (matches prefill/forward with source=None)
 
         if not n_cross:
             x, new = layer_scan(step, x, (params["blocks"], self_slices), unroll=cfg.unroll_layers)
         else:
             group = cfg.cross_attn_every
             n_self_per = group - 1
+            if "src_k" in cache:
+                cross_xs, cross_mode = (cache["src_k"], cache["src_v"]), "pooled"
+            elif "cross_k" in cache:
+                cross_xs, cross_mode = (cache["cross_k"], cache["cross_v"]), "perrow"
+            else:
+                # sourceless decode: the dedicated cross layer still applies
+                # its FFN; only the (gated) cross-attention term vanishes
+                cross_xs, cross_mode = (), "none"
 
             def group_step(x, xs):
-                gp, gs, cp, ck, cv = xs
+                gp, gs, cp, *ckv = xs
                 x, new = layer_scan(step, x, (gp, gs), unroll=cfg.unroll_layers)
                 h = rms_norm(x, cp["ln1"], cfg.norm_eps)
-                x = x + self._decode_cross_attn(cp["cross"], h, ck, cv,
-                                                cache["source_len"])
+                if cross_mode == "pooled":
+                    x = x + self._decode_cross_attn_pooled(
+                        cp["cross"], h, ckv[0], ckv[1],
+                        cache["src_index"], cache["src_len"])
+                elif cross_mode == "perrow":
+                    x = x + self._decode_cross_attn(cp["cross"], h, ckv[0],
+                                                    ckv[1],
+                                                    cache["source_len"])
                 h2 = rms_norm(x, cp["ln2"], cfg.norm_eps)
                 x = x + mlp_apply(cp["ffn"], h2, cfg.act, cfg.gated_mlp)
                 return x, new
@@ -671,8 +772,7 @@ class TransformerLM:
                 lambda a: a.reshape(n_cross, n_self_per, *a.shape[1:]),
                 self_slices)
             x, new = layer_scan(group_step, x,
-                                (gp, gs, params["cross_blocks"],
-                                 cache["cross_k"], cache["cross_v"]),
+                                (gp, gs, params["cross_blocks"], *cross_xs),
                                 unroll=cfg.unroll_layers)
             new = jax.tree.map(
                 lambda a: a.reshape(n_cross * n_self_per, *a.shape[2:]), new)
@@ -753,10 +853,20 @@ class TransformerLM:
 
     # ---- prefill: full-prompt forward that also fills the cache ------------
     def prefill(self, params: Params, tokens: jax.Array, cache: Cache,
-                source: jax.Array | None = None) -> tuple[jax.Array, Cache]:
+                source: jax.Array | None = None,
+                source_len: jax.Array | None = None) -> tuple[jax.Array, Cache]:
         """tokens: [B, Sp] (uniform prompt length — serving drivers pad to
         length groups); returns (last-position logits [B, V] f32, filled
-        cache). Keys are cached post-RoPE (paper §IV-C)."""
+        cache). Keys are cached post-RoPE (paper §IV-C).
+
+        ``source``: [B, S_src, d] frontend features for cross-attention
+        stacks; ``source_len``: optional [B] valid source prefixes when
+        rows carry sources of different true lengths padded to S_src —
+        cross reads mask the padded tails here and ``cache['source_len']``
+        records them so decode masks identically. ``source=None`` on a
+        cross config means *no source*: the (gated) cross-attention term
+        contributes nothing, while a dedicated (vlm-style) cross layer
+        still applies its FFN."""
         cfg = self.cfg
         b, sp = tokens.shape
         x = params["embed"].astype(self._dt)[tokens]
@@ -832,7 +942,7 @@ class TransformerLM:
                 if cfg.qk_norm:
                     qc = rms_norm(qc, bp["cross"]["qn"], cfg.norm_eps)
                 c_out = attn_lib.prefill_attention(
-                    qc, ck, cv, causal=False,
+                    qc, ck, cv, causal=False, kv_lengths=source_len,
                     kv_block=cfg.attn_block or 512)
                 c_out = linear(bp["cross"], "wo", c_out.reshape(b, sp, -1))
                 x = x + jnp.tanh(bp["cross"]["gate"]).astype(h.dtype) * c_out
@@ -856,20 +966,22 @@ class TransformerLM:
             def group_step(x, xs):
                 gp, gs, cp = xs
                 x, new = layer_scan(self_step, x, (gp, gs), unroll=cfg.unroll_layers)
-                ck, cv = kv_for(cp["cross"], source.astype(x.dtype),
-                                with_rope=False)
                 h = rms_norm(x, cp["ln1"], cfg.norm_eps)
-                qc = linear(cp["cross"], "wq", h).reshape(
-                    b, sp, cfg.n_heads, dh)
-                c_out = attn_lib.prefill_attention(
-                    qc, ck, cv, causal=False,
-                    kv_block=cfg.attn_block or 512)
-                c_out = linear(cp["cross"], "wo", c_out.reshape(b, sp, -1))
-                x = x + jnp.tanh(cp["cross"]["gate"]).astype(x.dtype) * c_out
+                if source is not None:
+                    ck, cv = kv_for(cp["cross"], source.astype(x.dtype),
+                                    with_rope=False)
+                    qc = linear(cp["cross"], "wq", h).reshape(
+                        b, sp, cfg.n_heads, dh)
+                    c_out = attn_lib.prefill_attention(
+                        qc, ck, cv, causal=False, kv_lengths=source_len,
+                        kv_block=cfg.attn_block or 512)
+                    c_out = linear(cp["cross"], "wo", c_out.reshape(b, sp, -1))
+                    x = x + jnp.tanh(cp["cross"]["gate"]).astype(x.dtype) * c_out
                 h2 = rms_norm(x, cp["ln2"], cfg.norm_eps)
                 x = x + mlp_apply(cp["ffn"], h2, cfg.act, cfg.gated_mlp)
-                new["cross_k"] = ck.astype(cache["cross_k"].dtype)
-                new["cross_v"] = cv.astype(cache["cross_v"].dtype)
+                if source is not None:
+                    new["cross_k"] = ck.astype(cache["cross_k"].dtype)
+                    new["cross_v"] = cv.astype(cache["cross_v"].dtype)
                 return x, new
 
             gp = jax.tree.map(
@@ -879,15 +991,21 @@ class TransformerLM:
                 lambda a: a.reshape(n_cross, n_self_per, *a.shape[1:]),
                 self_slices)
             x, new = layer_scan(group_step, x, (gp, gs, params["cross_blocks"]), unroll=cfg.unroll_layers)
-            cross_new = {"cross_k": new.pop("cross_k"),
-                         "cross_v": new.pop("cross_v")}
+            if source is not None:
+                cross_new = {"cross_k": new.pop("cross_k"),
+                             "cross_v": new.pop("cross_v")}
             new = jax.tree.map(
                 lambda a: a.reshape(n_cross * n_self_per, *a.shape[2:]), new)
-            new.update(cross_new)
+            if source is not None:
+                new.update(cross_new)
 
         cache = dict(cache)
         for key, val in new.items():
             cache[key] = val
+        if source is not None and "source_len" in cache:
+            cache["source_len"] = (
+                jnp.asarray(source_len, jnp.int32) if source_len is not None
+                else jnp.full_like(cache["source_len"], source.shape[1]))
         cache["len"] = jnp.full_like(cache["len"], sp)
         if cfg.rotary_dim and cfg.rope_mode == "incremental":
             rs = rope_lib.rope_state_init(cfg.resolved_head_dim, cfg.rope_base,
@@ -899,12 +1017,15 @@ class TransformerLM:
 
     # ---- slot-targeted ragged prefill (continuous batching) ----------------
     def supports_ragged_serving(self) -> bool:
-        """Chunked slot prefill + masked ragged decode cover the dense-KV
-        families, the recurrent-state families (ssm / hybrid: per-slot state
-        threading in ``prefill_chunk``, masked ``jnp.where`` state carries in
-        ``decode_step``), and MoE. The continuous MoE path is *drop-free by
-        construction* (per-row dispatch at decode, capacity=C dispatch in
-        chunk prefill), so a request's tokens never depend on batch
+        """Every family serves ragged — the gated set is empty
+        (``tests/test_serving_conformance.py`` pins that).
+
+        Chunked slot prefill + masked ragged decode cover the dense-KV
+        families; the recurrent-state families (ssm / hybrid) thread
+        per-slot state in ``prefill_chunk`` and mask ``jnp.where`` state
+        carries in ``decode_step``. The continuous MoE path is *drop-free
+        by construction* (per-row dispatch at decode, capacity=C dispatch
+        in chunk prefill), so a request's tokens never depend on batch
         composition; greedy equivalence against the lock-step engine is
         exact whenever the lock-step capacity-factor prefill itself drops
         nothing — under routing imbalance at low ``capacity_factor`` the
@@ -916,11 +1037,15 @@ class TransformerLM:
         chunked prefill writes at ``pos % ring_len`` with wrap, and the
         decode paths consume the ring in place (no unrotate copy).
 
-        The one remaining gated set: **cross-attention stacks** (vlm /
-        audio) — per-slot source KV would need its own pool keyed by source
-        id. ``tests/test_serving_conformance.py`` pins this enumeration."""
-        cfg = self.cfg
-        return cfg.family not in ("audio",) and not cfg.cross_attn_every
+        Cross-attention stacks (vlm / audio) — the last family to join —
+        serve through the **source-KV pool**: encoder-side K/V is ingested
+        once at admission into a refcounted pool entry keyed by source id
+        (``init_cache(n_sources=...)`` + :meth:`ingest_source`), each
+        slot's ``src_index`` points at its entry, and the decode /
+        chunk-prefill cross reads mask per-slot source lengths so rows
+        with different encoder lengths coexist in one static-shape
+        dispatch (``attn_lib.decode_cross_attention``)."""
+        return True
 
     def prefill_chunk(self, params: Params, tokens: jax.Array, cache: Cache,
                       slot: jax.Array, offset: jax.Array, last: jax.Array
@@ -960,12 +1085,16 @@ class TransformerLM:
         exact as long as ``ring_len >= window + chunk - 1`` (a later
         in-chunk token then only ever overwrites positions already outside
         every live query's window; the serving engine enforces the bound at
-        construction)."""
+        construction — and ``init_cache(chunk=...)`` sizes the ring so it
+        holds by construction).
+
+        Cross-attention configs (vlm / audio) read the slot's **source-KV
+        pool** entry: the chunk's queries cross-attend (non-causal, masked
+        to the entry's ``src_len``) to ``src_k/src_v[:, src_index[slot]]``
+        — already ingested at admission, never written here. A slot whose
+        entry has ``src_len == 0`` (no source) gets an exact-zero cross
+        term; a dedicated (vlm-style) cross layer still applies its FFN."""
         cfg = self.cfg
-        if not self.supports_ragged_serving():
-            raise NotImplementedError(
-                f"prefill_chunk: unsupported config {cfg.name} "
-                "(cross-attention stack)")
         if cfg.family == "ssm":
             return self._rwkv_prefill_chunk(params, tokens, cache, slot, last)
         (c,) = tokens.shape
@@ -978,6 +1107,29 @@ class TransformerLM:
         n_valid = last + 1
 
         ring = bool(cfg.kv_ring and cfg.window)
+        pooled_src = "src_k" in cache
+        if pooled_src:
+            s_src = cache["src_k"].shape[2]
+            entry = jnp.take(cache["src_index"], slot)
+            src_n = jnp.reshape(jnp.take(cache["src_len"], entry),
+                                (1,)).astype(jnp.int32)
+
+        def cross_read(cp, hc, sk_all, sv_all):
+            """Chunk queries (pre-normed ``hc`` [1, C, d]) against this
+            slot's pool entry in one layer's source KV ([E, S_src, Hkv,
+            Dh]) — read-only, masked to the entry's valid prefix."""
+            qc = linear(cp, "wq", hc).reshape(1, c, cfg.n_heads, dh)
+            if cfg.qk_norm:
+                qc = rms_norm(qc, cp["qn"], cfg.norm_eps)
+            sk = jax.lax.dynamic_slice(sk_all, (entry, 0, 0, 0),
+                                       (1, s_src, hkv, dh))
+            sv = jax.lax.dynamic_slice(sv_all, (entry, 0, 0, 0),
+                                       (1, s_src, hkv, dh))
+            out = attn_lib.prefill_attention(qc, sk, sv, causal=False,
+                                             kv_lengths=src_n,
+                                             kv_block=cfg.attn_block or 512)
+            out = linear(cp, "wo", out.reshape(1, c, -1))
+            return jnp.tanh(cp["gate"]).astype(hc.dtype) * out
 
         def step(x, xs):
             bp, slices = xs
@@ -1046,6 +1198,10 @@ class TransformerLM:
                                           cfg.norm_eps))
             else:
                 x = x + attn_out
+            if "cross" in bp and "src_k" in slices:   # whisper-style in-layer
+                hc = rms_norm(x, bp["ln_cross"], cfg.norm_eps)
+                x = x + cross_read(bp["cross"], hc, slices["src_k"],
+                                   slices["src_v"])
             h2 = rms_norm(x, bp["ln2"], cfg.norm_eps)
             if cfg.n_experts:
                 # capacity = chunk length C: each token assigns an expert at
@@ -1065,8 +1221,42 @@ class TransformerLM:
         if cfg.family == "hybrid":
             self_slices["mamba_conv"] = cache["mamba_conv"]
             self_slices["mamba_ssm"] = cache["mamba_ssm"]
-        x, new = layer_scan(step, x, (params["blocks"], self_slices),
-                            unroll=cfg.unroll_layers)
+        if cfg.cross_attn_every == 1 and pooled_src:   # whisper-style
+            self_slices["src_k"] = cache["src_k"]
+            self_slices["src_v"] = cache["src_v"]
+
+        n_cross = self._n_cross_groups()
+        if not n_cross:
+            x, new = layer_scan(step, x, (params["blocks"], self_slices),
+                                unroll=cfg.unroll_layers)
+        else:                                          # vlm: dedicated cross
+            group = cfg.cross_attn_every
+            n_self_per = group - 1
+            cross_xs = ((cache["src_k"], cache["src_v"]) if pooled_src
+                        else ())
+
+            def group_step(x, xs):
+                gp, gs, cp, *skv = xs
+                x, new = layer_scan(step, x, (gp, gs),
+                                    unroll=cfg.unroll_layers)
+                if pooled_src:
+                    hc = rms_norm(x, cp["ln1"], cfg.norm_eps)
+                    x = x + cross_read(cp["cross"], hc, skv[0], skv[1])
+                h2 = rms_norm(x, cp["ln2"], cfg.norm_eps)
+                x = x + mlp_apply(cp["ffn"], h2, cfg.act, cfg.gated_mlp)
+                return x, new
+
+            gp = jax.tree.map(
+                lambda a: a.reshape(n_cross, n_self_per, *a.shape[1:]),
+                params["blocks"])
+            gs = jax.tree.map(
+                lambda a: a.reshape(n_cross, n_self_per, *a.shape[1:]),
+                self_slices)
+            x, new = layer_scan(group_step, x,
+                                (gp, gs, params["cross_blocks"], *cross_xs),
+                                unroll=cfg.unroll_layers)
+            new = jax.tree.map(
+                lambda a: a.reshape(n_cross * n_self_per, *a.shape[2:]), new)
         cache = dict(cache)
         for key, val in new.items():
             cache[key] = val
@@ -1158,6 +1348,71 @@ class TransformerLM:
         cache, logits = jax.lax.scan(
             row, cache, (tokens, slots, offsets, lasts, valid))
         return logits, cache
+
+    # ---- source-KV pool (cross-attention continuous serving) ---------------
+    def ingest_source(self, params: Params, source: jax.Array, cache: Cache,
+                      entry: jax.Array, length: jax.Array) -> Cache:
+        """Write one source's encoder-side cross K/V into pool entry
+        ``entry`` — the write-once half of the source-KV pool contract
+        (computed at admission, read-only for every decode tick after).
+
+        source: [S_max, d] frontend features, padded to the pool row size;
+        ``length``: the valid prefix. Each cross layer's ``wk``/``wv``
+        projects the source once (no RoPE — cross keys are position-free,
+        matching :meth:`prefill`'s ``with_rope=False``); rows past
+        ``length`` are zeroed so a pool entry's device state is exactly
+        (real K/V, zeros) — never a previous occupant's tail — and every
+        read additionally masks by ``src_len``. The caller
+        (``repro.serving.continuous``) owns the host-side ledger
+        (``SourceKVPool``): which entry a source id maps to, refcounts, and
+        when :meth:`release_source` may zero the entry."""
+        cfg = self.cfg
+        dh = cfg.resolved_head_dim
+        src = source.astype(self._dt)                        # [S_max, d]
+        stacked = (params["cross_blocks"] if cfg.cross_attn_every > 1
+                   else params["blocks"])
+
+        def proj(bp):
+            p = bp["cross"]
+            k = linear(p, "wk", src).reshape(-1, cfg.n_kv_heads, dh)
+            v = linear(p, "wv", src).reshape(-1, cfg.n_kv_heads, dh)
+            if cfg.qk_norm:
+                k = rms_norm(k, p["kn"], cfg.norm_eps)
+            return k, v
+
+        ks, vs = jax.vmap(proj)(stacked)                     # [Lc, S, Hkv, Dh]
+        keep = (jnp.arange(ks.shape[1]) < length)[None, :, None, None]
+        ks = jnp.where(keep, ks, 0).astype(cache["src_k"].dtype)
+        vs = jnp.where(keep, vs, 0).astype(cache["src_v"].dtype)
+        cache = dict(cache)
+        cache["src_k"] = jax.lax.dynamic_update_slice(
+            cache["src_k"], ks[:, None], (0, entry, 0, 0, 0))
+        cache["src_v"] = jax.lax.dynamic_update_slice(
+            cache["src_v"], vs[:, None], (0, entry, 0, 0, 0))
+        cache["src_len"] = cache["src_len"].at[entry].set(
+            jnp.asarray(length, jnp.int32))
+        return cache
+
+    def assign_source(self, cache: Cache, slot: jax.Array,
+                      entry: jax.Array) -> Cache:
+        """Point a slot's cross-attention reads at pool entry ``entry``
+        (``src_index[slot] = entry``). Sharing is this one int: any number
+        of slots may map to the same entry."""
+        return dict(cache, src_index=cache["src_index"].at[slot].set(
+            jnp.asarray(entry, jnp.int32)))
+
+    def release_source(self, cache: Cache, entry: jax.Array) -> Cache:
+        """Zero a pool entry's source K/V rows and its ``src_len`` — called
+        only when the entry's last reference retired (the ``SourceKVPool``
+        ledger decides). After this, any slot still pointing at the entry
+        (an inactive slot whose output is discarded anyway) reads a
+        fully-masked zero; a backfilled request can never see the previous
+        occupant's encoder state."""
+        cache = dict(cache)
+        cache["src_k"] = cache["src_k"].at[:, entry].set(0)
+        cache["src_v"] = cache["src_v"].at[:, entry].set(0)
+        cache["src_len"] = cache["src_len"].at[entry].set(0)
+        return cache
 
     def finalize_slot(self, cache: Cache, slot: jax.Array,
                       length: jax.Array) -> Cache:

@@ -5,6 +5,18 @@ precomputed frame embeddings ``[B, source_len, d_model]``. The encoder is a
 bidirectional TransformerLM stack; the decoder is causal with in-layer
 cross-attention (``cross_attn_every=1``), its cross-KV computed once at
 prefill and cached — decode then touches only the decoder stack.
+
+Serving: the model is a thin delegator — every serving entry point
+(``prefill_chunk`` / ``prefill_chunks_batched`` / ``decode_step`` /
+``decode_multi`` / ``finalize_slot`` / ``release_slot`` and the source-KV
+pool trio ``ingest_source`` / ``assign_source`` / ``release_source``)
+forwards to the decoder stack with ``params["decoder"]``, so the
+continuous-batching engine drives an encoder-decoder model through exactly
+the same calls as a decoder-only one. The single encoder-decoder-specific
+step is :meth:`ingest_source`: it runs the (length-masked) encoder over the
+padded frame embeddings *before* projecting the decoder's per-layer cross
+K/V into the pool entry — one encoder pass per distinct source id, shared
+by every request that presents the same id.
 """
 from __future__ import annotations
 
@@ -30,9 +42,14 @@ class WhisperModel:
                 "decoder": self.decoder.init_params(k2)}
 
     def encode(self, params: Params, source: jax.Array,
-               remat: bool = True) -> jax.Array:
+               remat: bool = True,
+               source_len: jax.Array | None = None) -> jax.Array:
+        """``source_len``: optional [B] valid frame prefixes — a padded
+        batch masks encoder self-attention keys past each row's true
+        length, so valid positions' encodings are independent of the
+        padding (the bidirectional analogue of causal masking)."""
         h, _ = self.encoder.forward(params["encoder"], embeds=source,
-                                    remat=remat)
+                                    kv_length=source_len, remat=remat)
         return h
 
     def forward(self, params: Params, tokens: jax.Array, *,
@@ -42,14 +59,59 @@ class WhisperModel:
                                     remat=remat)
 
     def init_cache(self, batch: int, max_len: int,
-                   source_len: int | None = None) -> Cache:
+                   source_len: int | None = None, *,
+                   n_sources: int | None = None,
+                   chunk: int | None = None) -> Cache:
         return self.decoder.init_cache(batch, max_len,
-                                       source_len or self.cfg.source_len)
+                                       source_len or self.cfg.source_len,
+                                       n_sources=n_sources, chunk=chunk)
 
     def prefill(self, params: Params, tokens: jax.Array, cache: Cache,
-                source: jax.Array | None = None):
-        enc = self.encode(params, source)
-        return self.decoder.prefill(params["decoder"], tokens, cache, source=enc)
+                source: jax.Array | None = None,
+                source_len: jax.Array | None = None):
+        if source is None:
+            return self.decoder.prefill(params["decoder"], tokens, cache)
+        enc = self.encode(params, source, source_len=source_len)
+        return self.decoder.prefill(params["decoder"], tokens, cache,
+                                    source=enc, source_len=source_len)
 
-    def decode_step(self, params: Params, tokens: jax.Array, cache: Cache):
-        return self.decoder.decode_step(params["decoder"], tokens, cache)
+    def decode_step(self, params: Params, tokens: jax.Array, cache: Cache,
+                    active: jax.Array | None = None):
+        return self.decoder.decode_step(params["decoder"], tokens, cache,
+                                        active)
+
+    def decode_multi(self, params: Params, *args, **kw):
+        return self.decoder.decode_multi(params["decoder"], *args, **kw)
+
+    # ---- continuous serving (delegated to the decoder stack) --------------
+    def supports_ragged_serving(self) -> bool:
+        return self.decoder.supports_ragged_serving()
+
+    def prefill_chunk(self, params: Params, *args, **kw):
+        return self.decoder.prefill_chunk(params["decoder"], *args, **kw)
+
+    def prefill_chunks_batched(self, params: Params, *args, **kw):
+        return self.decoder.prefill_chunks_batched(params["decoder"],
+                                                   *args, **kw)
+
+    def finalize_slot(self, cache: Cache, slot, length) -> Cache:
+        return self.decoder.finalize_slot(cache, slot, length)
+
+    def release_slot(self, cache: Cache, slot) -> Cache:
+        return self.decoder.release_slot(cache, slot)
+
+    def ingest_source(self, params: Params, source: jax.Array, cache: Cache,
+                      entry, length) -> Cache:
+        """Encoder-decoder source ingest: run the length-masked encoder
+        over the padded frames once, then pool the decoder's per-layer
+        cross K/V of the encoding (``TransformerLM.ingest_source``)."""
+        enc = self.encode(params, source[None],
+                          source_len=jnp.reshape(length, (1,)))[0]
+        return self.decoder.ingest_source(params["decoder"], enc, cache,
+                                          entry, length)
+
+    def assign_source(self, cache: Cache, slot, entry) -> Cache:
+        return self.decoder.assign_source(cache, slot, entry)
+
+    def release_source(self, cache: Cache, entry) -> Cache:
+        return self.decoder.release_source(cache, entry)

@@ -1,9 +1,9 @@
 from .engine import ServingEngine
-from .slot_pool import KVSlotPool, SlotPoolError
+from .slot_pool import KVSlotPool, SlotPoolError, SourceKVPool
 from .scheduler import Request, RequestState, Scheduler
 from .continuous import ContinuousBatchingEngine
 from .workload import load_trace, poisson_trace
 
 __all__ = ["ServingEngine", "ContinuousBatchingEngine", "KVSlotPool",
-           "SlotPoolError", "Request", "RequestState", "Scheduler",
-           "load_trace", "poisson_trace"]
+           "SlotPoolError", "SourceKVPool", "Request", "RequestState",
+           "Scheduler", "load_trace", "poisson_trace"]

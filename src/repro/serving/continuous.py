@@ -6,7 +6,13 @@ tokens.
 The jit'd decode program always runs at ``[n_slots]`` batch shape; an
 ``active`` mask carries which slots hold live requests. Each engine step:
 
-1. **admit** — backfill free slots from the admission queue;
+1. **admit** — backfill free slots from the admission queue. Cross-
+   attention configs (vlm / audio) also resolve each admitted request's
+   **source-KV pool** entry here: an already-resident source id is shared
+   by refcount (zero encoder work), a fresh one is ingested once
+   (``TransformerLM.ingest_source``) and the slot's ``src_index`` pointed
+   at it — before the request's first prefill chunk, whose cross reads
+   need the entry resident;
 2. **prefill** — every mid-prefill slot advances by one prompt chunk in a
    *single* batched dispatch (``TransformerLM.prefill_chunks_batched``), so
    long prompts never stall in-flight decodes for more than one chunk's
@@ -42,12 +48,23 @@ recurrent-state rows (ssm / hybrid) carry through masked ticks unchanged,
 and MoE rows use the capacity-free per-row dispatch.
 
 Ring KV configs (``kv_ring`` SWA archs) serve with **O(window) slots**:
-``init_cache`` allocates ``[n_slots, ring_len, Hkv, D]`` rings, chunked
-prefill writes at ``pos % ring_len`` (a prompt longer than the window wraps
-over its own out-of-window entries), parked rows use a per-slot write mask
-instead of the reserved tail row, and the decode kernels consume the ring
-in place. ``report()``'s ``kv_bytes_per_slot`` / ``kv_rows_per_slot`` lines
-make the memory win a measured number.
+``init_cache(chunk=...)`` allocates ``[n_slots, round128(window + chunk),
+Hkv, D]`` rings (the chunked-prefill exactness bound ``ring_len >= window
++ chunk - 1`` holds by construction), chunked prefill writes at ``pos %
+ring_len`` (a prompt longer than the window wraps over its own
+out-of-window entries), parked rows use a per-slot write mask instead of
+the reserved tail row, and the decode kernels consume the ring in place.
+``report()``'s ``kv_bytes_per_slot`` / ``kv_rows_per_slot`` lines make the
+memory win a measured number.
+
+Cross-attention stacks serve through the source-KV pool: slots map to
+refcounted, read-only encoder-side K/V entries keyed by source id
+(``slot_pool.SourceKVPool`` holds the ledger; ``docs/serving.md`` the
+lifecycle). Rows with heterogeneous source lengths coexist in one
+static-shape dispatch — each read masks its own entry's ``src_len`` — and
+entries are zeroed only when their last holder retires, so slot reuse
+never leaks a predecessor's encoder state. ``source_ingests`` /
+``source_shares`` in ``report()`` carry the dedup win.
 
 Sampling (temperature > 0) is fused into the jit'd block as seeded per-slot
 Gumbel-max (``argmax(logits/T + g)`` with ``g ~ Gumbel(0,1)`` is exactly a
@@ -77,7 +94,7 @@ import numpy as np
 from repro.models.transformer import seeded_gumbel_pick
 
 from .scheduler import Request, RequestState, Scheduler
-from .slot_pool import KVSlotPool
+from .slot_pool import KVSlotPool, SourceKVPool
 
 
 def _pct(xs, q):
@@ -93,13 +110,11 @@ class ContinuousBatchingEngine:
     def __init__(self, model, params, *, n_slots: int, max_len: int,
                  chunk: int = 16, eos_id: int | None = None,
                  pad_id: int = 0, temperature: float = 0.0, seed: int = 0,
-                 decode_ticks: int = 1):
+                 decode_ticks: int = 1, source_len: int | None = None):
         if not getattr(model, "supports_ragged_serving", lambda: False)():
             raise ValueError(
-                f"{model.cfg.name}: continuous batching needs a "
-                "slot-serializable decode state (cross-attention source KV "
-                "is not poolable yet — it would need its own pool keyed by "
-                "source id)")
+                f"{model.cfg.name}: model does not claim ragged serving "
+                "(supports_ragged_serving() is False)")
         if chunk < 1 or max_len % chunk:
             raise ValueError(f"chunk ({chunk}) must divide max_len "
                              f"({max_len}) so padded chunks stay in range")
@@ -116,6 +131,25 @@ class ContinuousBatchingEngine:
                                         donate_argnums=(2,))
         self._finalize = jax.jit(model.finalize_slot, donate_argnums=(0,))
         self._release = jax.jit(model.release_slot, donate_argnums=(0,))
+
+        # cross-attention stacks (vlm / audio): a second, refcounted pool
+        # holds the encoder-side K/V, keyed by source id — ingested once at
+        # admission, shared read-only by every slot whose request presents
+        # the same id, zeroed when the last holder retires. n_entries ==
+        # n_slots, so an entry is always available when a slot is
+        # (each live request holds at most one reference).
+        from repro.models.api import needs_source
+        cfg = model.cfg
+        self.needs_source = needs_source(cfg)
+        self.src_pool = None
+        if self.needs_source:
+            self.src_max = source_len or cfg.source_len
+            self.src_pool = SourceKVPool(n_slots, self.src_max)
+            self._srcs: dict = {}           # rid -> held source id
+            self._ingest = jax.jit(model.ingest_source, donate_argnums=(2,))
+            self._assign = jax.jit(model.assign_source, donate_argnums=(0,))
+            self._src_release = jax.jit(model.release_source,
+                                        donate_argnums=(0,))
 
         # sampler keys: (seed, request admission serial, token index) —
         # request-intrinsic, so a draw can't depend on batch composition,
@@ -135,15 +169,21 @@ class ContinuousBatchingEngine:
                                       jnp.int32(0), temperature)
         self._prefill_pick = jax.jit(_prefill_pick)
 
-        self.cache = model.init_cache(n_slots, max_len)
-        cfg = model.cfg
+        self.cache = model.init_cache(
+            n_slots, max_len,
+            self.src_max if self.needs_source else None,
+            n_sources=n_slots if self.needs_source else None,
+            chunk=chunk)
         if cfg.kv_ring and cfg.window and "k" in self.cache:
             # ring-prefill exactness bound: a chunk's later tokens may
             # overwrite ring slots its earlier queries still need unless
             # the overwritten positions are already outside every live
-            # window — guaranteed iff ring_len >= window + chunk - 1. A
-            # ring as large as max_len never wraps (slot capacity bounds
-            # every position below max_len), so it is exempt.
+            # window — guaranteed iff ring_len >= window + chunk - 1.
+            # init_cache(chunk=...) sizes the ring as round128(window +
+            # chunk) precisely so this holds by construction (degenerating
+            # to the never-wrapping full cache when that reaches max_len),
+            # so the check below is a safety invariant, not a user-facing
+            # constraint.
             ring_len = int(self.cache["k"].shape[2])
             if ring_len < max_len and chunk > ring_len - cfg.window + 1:
                 raise ValueError(
@@ -180,7 +220,23 @@ class ContinuousBatchingEngine:
 
     # ---- intake -----------------------------------------------------------
     def submit(self, request: Request, now: float = 0.0) -> RequestState:
-        state = self.sched.submit(request, now)
+        reject = None
+        if self.needs_source:
+            if (request.source is not None
+                    and len(request.source) > self.src_max):
+                reject = (f"rejected: source of {len(request.source)} rows "
+                          f"> source-KV pool rows {self.src_max}")
+            elif request.source is None and request.source_id is not None:
+                # a shared id must be ingestable by whichever holder
+                # arrives first — an id with no features would poison the
+                # entry (src_len 0) for every later sharer, so it is a
+                # contract violation, rejected here rather than silently
+                # decoding sourceless
+                reject = ("rejected: source_id "
+                          f"{request.source_id!r} without source features "
+                          "(a shared entry must be ingestable by its "
+                          "first holder)")
+        state = self.sched.submit(request, now, reject=reject)
         if state.status != "rejected":
             # admission order is FIFO over submission order, so the serial
             # is a deterministic property of the trace
@@ -202,8 +258,10 @@ class ContinuousBatchingEngine:
         m_want = 2 * self.max_ticks     # walks K = max_ticks, ..., 2, 1
         p = max(1, min(self.chunk + 1, self.pool.capacity - m_want))
         m = max(2, min(m_want, self.pool.capacity - p))
+        src = (np.zeros((self.src_max, self.model.cfg.d_model), np.float32)
+               if self.needs_source else None)   # compiles ingest/assign too
         self.run([Request(prompt=np.zeros(p, np.int32), max_new_tokens=m,
-                          rid="__warmup__")])
+                          rid="__warmup__", source=src)])
         return self
 
     # ---- decode program per tick horizon ----------------------------------
@@ -261,7 +319,14 @@ class ContinuousBatchingEngine:
         arrival while a slot is free (caps the horizon — see
         ``_tick_horizon``). Returns False when nothing was left to do."""
         now = (time.perf_counter() - self._t0) if now is None else now
-        self.sched.admit(now)
+        newly = self.sched.admit(now)
+        if self.needs_source:
+            # source ingest happens AT admission, before the request's
+            # first prefill chunk — the chunk's cross reads need the
+            # entry resident (whisper-style decoders cross-attend in
+            # every layer from chunk 0)
+            for st in newly:
+                self._acquire_source(st)
 
         if self.sched.prefilling:
             self._advance_prefills()
@@ -296,6 +361,35 @@ class ContinuousBatchingEngine:
                 self.pool.advance(int(slot))
                 self._emit(state, int(rows[t, slot]), now_blk)
         return True
+
+    def _acquire_source(self, st: RequestState) -> None:
+        """Resolve a newly admitted request's source-KV pool entry: bump an
+        existing entry's refcount when its source id is already resident
+        (no encoder work at all — the dedup win), else take a fresh entry
+        and ingest the padded source once (one dispatch: encoder for
+        audio, per-layer cross K/V projections for vlm). Either way the
+        slot's ``src_index`` is pointed at the entry. A request without a
+        source still takes an entry; its ``src_len`` stays 0, so every
+        cross read masks to an exact zero."""
+        req = st.request
+        sid = (req.source_id if req.source_id is not None
+               else ("__rid__", st.rid))
+        entry, fresh = self.src_pool.acquire(sid)
+        assert entry is not None, "source pool exhausted with a free slot"
+        self._srcs[st.rid] = sid
+        if fresh and req.source is not None:
+            cfg = self.model.cfg
+            padded = np.zeros((self.src_max, cfg.d_model), np.float32)
+            padded[:len(req.source)] = req.source
+            self.cache = self._ingest(self.params, jnp.asarray(padded),
+                                      self.cache, jnp.int32(entry),
+                                      jnp.int32(len(req.source)))
+            self.dispatches += 1
+        # fresh + no source: the entry's rows and src_len are already zero
+        # (init / release_source), which IS the empty-source state
+        self.cache = self._assign(self.cache, jnp.int32(st.slot),
+                                  jnp.int32(entry))
+        self.dispatches += 1
 
     def _advance_prefills(self) -> None:
         """One batched dispatch advancing *all* mid-prefill slots one chunk
@@ -357,6 +451,15 @@ class ContinuousBatchingEngine:
             slot = self.sched.retire(state, reason, now)
             self.cache = self._release(self.cache, jnp.int32(slot))
             self.dispatches += 1
+            if self.needs_source:
+                # drop the source reference; zero the entry only when this
+                # was the last holder (other slots may still be decoding
+                # against the same source id)
+                freed = self.src_pool.release(self._srcs.pop(state.rid))
+                if freed is not None:
+                    self.cache = self._src_release(self.cache,
+                                                   jnp.int32(freed))
+                    self.dispatches += 1
             self.active[slot] = False
             self.tok[slot] = self.pad_id
             self.budget[slot] = 0
@@ -376,6 +479,8 @@ class ContinuousBatchingEngine:
         # so drop finished-traffic history before timing starts
         self.sched.reset_stats()
         self.pool.reset_stats()
+        if self.src_pool is not None:
+            self.src_pool.reset_stats()
         self._zero_counters()
         waiting = sorted(requests or [], key=lambda r: r.arrival)
         self._t0 = t0 = time.perf_counter()
@@ -396,6 +501,10 @@ class ContinuousBatchingEngine:
                                - (time.perf_counter() - t0)))
         wall = time.perf_counter() - t0
         self.sched.assert_conservation()
+        if self.src_pool is not None:
+            self.src_pool.assert_consistent()
+            assert self.src_pool.n_used <= self.pool.n_used, \
+                "source entries outlive their holders"
         return self.report(wall)
 
     def report(self, wall_s: float) -> dict:
@@ -406,8 +515,10 @@ class ContinuousBatchingEngine:
         # per-slot KV memory accounting: the O(window) win of ring caches
         # (kv_rows_per_slot == ring_len << max_len) is a reported number,
         # not an inference from shapes; recurrent-state families carry no
-        # KV rows and report 0
-        kv = [self.cache[k] for k in ("k", "v", "cross_k", "cross_v")
+        # KV rows and report 0. Pooled source KV (src_k / src_v) counts
+        # too — with n_entries == n_slots the per-slot share is exact.
+        kv = [self.cache[k] for k in ("k", "v", "cross_k", "cross_v",
+                                      "src_k", "src_v")
               if k in self.cache]
         kv_bytes = sum(int(a.size) * a.dtype.itemsize for a in kv)
         agg = {
@@ -441,6 +552,13 @@ class ContinuousBatchingEngine:
             "itl_effective_ms": (round(1e3 * wall_s / gen, 4)
                                  if gen else None),
         }
+        if self.src_pool is not None:
+            # source-KV pool accounting: ingests ran the encoder / cross
+            # projections; shares were served by refcount alone (the dedup
+            # win — N requests on one image pay one ingest)
+            agg["source_ingests"] = self.src_pool.total_ingests
+            agg["source_shares"] = self.src_pool.total_shares
+            agg["src_rows_per_entry"] = self.src_pool.src_max
         if self.max_ticks > 1:
             agg["itl_note"] = (
                 "decode_ticks > 1: token timestamps are block-granular, so "

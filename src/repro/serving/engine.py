@@ -29,8 +29,15 @@ class ServingEngine:
     def generate(self, prompts: jax.Array, *, steps: int,
                  temperature: float = 0.0, rng=None,
                  eos_id: int | None = None, pad_id: int = 0,
-                 source: jax.Array | None = None) -> jax.Array:
+                 source: jax.Array | None = None,
+                 source_len: jax.Array | None = None) -> jax.Array:
         """prompts: [B, P] int32 (uniform length). Returns [B, steps].
+
+        ``source``: [B, S_src, d] cross-attention features, padded to a
+        uniform S_src; ``source_len``: optional [B] true lengths — prefill
+        masks each row's padded source tail and the decode cross reads
+        inherit the mask through ``cache['source_len']``, so rows with
+        heterogeneous encoder lengths batch together.
 
         A row that emits ``eos_id`` is retired: the EOS token itself is
         emitted, every later step emits ``pad_id``, and the row's decode
@@ -44,7 +51,8 @@ class ServingEngine:
         assert b == self.batch and p + steps <= self.max_len
         rng = jax.random.PRNGKey(0) if rng is None else rng
         cache = self.new_cache()
-        logits, cache = self._prefill(self.params, prompts, cache, source)
+        logits, cache = self._prefill(self.params, prompts, cache, source,
+                                      source_len)
         outs = []
         active = jnp.ones((b,), bool)
         tok = self._sample(logits, temperature, rng)

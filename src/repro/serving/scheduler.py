@@ -10,8 +10,11 @@ slot assignment from the :class:`KVSlotPool`, per-request token ledgers and
 timing, and retirement (EOS / max-token) with prompt backfill — a freed slot
 is handed to the next queued request at the following engine step's
 admission, so it never idles while work is waiting. All device work (chunked
-prefill, ragged decode, cache resets) lives in
-:mod:`repro.serving.continuous`.
+prefill, ragged decode, cache resets, source-KV ingest for cross-attention
+requests) lives in :mod:`repro.serving.continuous`; the engine may also
+veto a request at submit time with a precomputed ``reject`` reason (e.g. a
+source longer than the source-KV pool rows), which flows through the same
+rejection bookkeeping as a slot-capacity miss.
 
 Conservation invariant (checked by ``assert_conservation``): every submitted
 request is in exactly one of queued / prefilling / decoding / retired /
@@ -35,11 +38,21 @@ QUEUED, PREFILLING, DECODING, RETIRED, REJECTED = (
 @dataclass(eq=False)               # identity equality: prompts are arrays
 class Request:
     """One generation request. ``arrival`` is seconds on the engine clock
-    (0.0 = already waiting when the engine starts)."""
+    (0.0 = already waiting when the engine starts).
+
+    ``source``: optional [S, d] float32 encoder-side features for
+    cross-attention stacks (vlm patch embeds / audio frames) — rows may
+    have *heterogeneous* lengths across a trace; the serving engines pad
+    and mask. ``source_id``: dedup key for the source-KV pool — requests
+    presenting the same id share one pooled encoder ingest (the engine
+    never compares feature bytes, only this id); ``None`` means the source
+    is private to this request."""
     prompt: np.ndarray                 # [P] int32 token ids
     max_new_tokens: int
     rid: int | str | None = None
     arrival: float = 0.0
+    source: np.ndarray | None = None   # [S, d] float32 frontend features
+    source_id: object = None           # hashable dedup key; None -> private
 
     def __post_init__(self):
         self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
@@ -47,6 +60,11 @@ class Request:
             raise ValueError("empty prompt")
         if self.max_new_tokens < 1:
             raise ValueError("max_new_tokens must be >= 1")
+        if self.source is not None:
+            self.source = np.asarray(self.source, np.float32)
+            if self.source.ndim != 2:
+                raise ValueError(f"source must be [S, d], got "
+                                 f"{self.source.shape}")
 
     @property
     def budget(self) -> int:
@@ -108,7 +126,12 @@ class Scheduler:
         self.n_retired = 0
 
     # ---- intake -----------------------------------------------------------
-    def submit(self, request: Request, now: float = 0.0) -> RequestState:
+    def submit(self, request: Request, now: float = 0.0,
+               reject: str | None = None) -> RequestState:
+        """``reject``: an engine-computed rejection reason for constraints
+        the scheduler can't see (e.g. a source longer than the source-KV
+        pool rows) — the request is recorded as rejected without queueing,
+        through the same bookkeeping as a capacity rejection."""
         if request.rid is None:
             while (rid := f"auto-{next(self._auto_rid)}") in self._rids:
                 pass
@@ -118,10 +141,12 @@ class Scheduler:
         self._rids.add(request.rid)
         state = RequestState(request=request, t_submit=now)
         self.n_submitted += 1
-        if not self.pool.fits(request.budget):
+        if reject is None and not self.pool.fits(request.budget):
+            reject = (f"rejected: needs {request.budget} rows > "
+                      f"slot capacity {self.pool.capacity}")
+        if reject is not None:
             state.status = REJECTED
-            state.finish_reason = (f"rejected: needs {request.budget} rows > "
-                                   f"slot capacity {self.pool.capacity}")
+            state.finish_reason = reject
             state.t_done = now
             self.rejected.append(state)
             return state

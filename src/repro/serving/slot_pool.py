@@ -1,8 +1,9 @@
-"""KV slot pool: fixed pool of cache slots with free-list allocation.
+"""KV slot pool + source-KV pool: the host-side ledgers of continuous
+batching (see ``docs/serving.md`` for the full lifecycle diagram).
 
 Continuous batching keeps the jit'd decode step at a static ``[n_slots]``
-batch shape while request membership changes every step. The pool is the
-host-side ledger over the model's preallocated decode cache
+batch shape while request membership changes every step. :class:`KVSlotPool`
+is the host-side ledger over the model's preallocated decode cache
 (``model.init_cache(n_slots, max_len)``): slot ``s`` owns rows
 ``cache[k|v][:, s, :]`` plus its entries of ``cache['len']`` and the RoPE
 angle state.
@@ -28,6 +29,19 @@ Layout contract with :meth:`TransformerLM.decode_step`'s ragged form:
   x_prev/wkv, Mamba conv/ssm) on release: unlike KV rows it feeds forward
   multiplicatively, so the next occupant must start from the empty-context
   state rather than merely ignoring stale rows.
+
+:class:`SourceKVPool` is the second ledger, for **cross-attention stacks**
+(vlm / audio): the encoder-side K/V a request's decoder cross-attends to.
+Unlike self-attention KV it is written exactly once (at admission, via
+``TransformerLM.ingest_source``) and *read-only* for the request's whole
+lifetime, so it pools by **source id** with reference counting — N requests
+decoding against the same image / audio clip share one device entry (the
+encoder runs once, not N times), and ``cache['src_index']`` maps each slot
+to its entry. The entry's device rows are zeroed only when its refcount
+drops to zero (``TransformerLM.release_source``), so a backfilled request
+can never read its predecessor's encoder state: the predecessor's entry is
+either still alive (held by another sharing request, and the new occupant's
+``src_index`` points elsewhere) or zeroed.
 """
 from __future__ import annotations
 
@@ -127,3 +141,106 @@ class KVSlotPool:
         assert self.total_allocs - self.total_releases == len(self._owner)
         for slot in self._free:
             assert self._length[slot] == 0, f"freed slot {slot} keeps length"
+
+
+class SourceKVPool:
+    """Refcounted pool of encoder-side (source) K/V entries, keyed by
+    source id.
+
+    Entry ``e`` owns the device rows ``cache['src_k'|'src_v'][:, e]`` and
+    ``cache['src_len'][e]``. ``acquire(source_id)`` either bumps an existing
+    entry's refcount (the source is already resident — N requests share one
+    encoder ingest) or takes a fresh entry off the free list; ``release``
+    drops a reference and hands the entry back for zeroing
+    (``TransformerLM.release_source``) only when the last holder retires.
+
+    Capacity note: with ``n_entries == n_slots`` (the continuous engine's
+    default) acquisition can never fail while a slot is free — each live
+    request holds at most one reference, so entries in use <= slots in use,
+    and sharing only loosens that bound. A smaller pool would need an
+    admission gate; a larger one is pure dedup headroom.
+    """
+
+    def __init__(self, n_entries: int, src_max: int):
+        if n_entries < 1:
+            raise SlotPoolError(f"n_entries must be >= 1, got {n_entries}")
+        if src_max < 1:
+            raise SlotPoolError(f"src_max must be >= 1, got {src_max}")
+        self.n_entries = n_entries
+        self.src_max = src_max              # rows per entry (pad-to length)
+        self._free = list(range(n_entries - 1, -1, -1))   # pop() -> entry 0
+        self._entry: dict[Hashable, int] = {}             # source id -> entry
+        self._refs: dict[int, int] = {}                   # entry -> refcount
+        self._sid: dict[int, Hashable] = {}               # entry -> source id
+        self.total_ingests = 0              # fresh entries (encoder ran)
+        self.total_shares = 0               # acquisitions served by sharing
+
+    # ---- queries ----------------------------------------------------------
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_used(self) -> int:
+        return self.n_entries - len(self._free)
+
+    def fits(self, source_rows: int) -> bool:
+        """Can a source needing ``source_rows`` K/V rows ever be ingested?
+        (Zero rows — a request with no source — always fits: it still takes
+        an entry, whose ``src_len`` stays 0 so every read masks to zero.)"""
+        return 0 <= source_rows <= self.src_max
+
+    def entry_of(self, source_id: Hashable) -> int | None:
+        return self._entry.get(source_id)
+
+    def refcount(self, entry: int) -> int:
+        return self._refs.get(entry, 0)
+
+    # ---- acquire / release ------------------------------------------------
+    def acquire(self, source_id: Hashable) -> tuple[int | None, bool]:
+        """Returns ``(entry, fresh)``: ``fresh=True`` means the caller must
+        ingest the source's K/V into the entry's device rows; ``fresh=False``
+        means the source is already resident and this request shares it.
+        ``(None, False)`` when the pool is exhausted."""
+        entry = self._entry.get(source_id)
+        if entry is not None:
+            self._refs[entry] += 1
+            self.total_shares += 1
+            return entry, False
+        if not self._free:
+            return None, False
+        entry = self._free.pop()
+        self._entry[source_id] = entry
+        self._refs[entry] = 1
+        self._sid[entry] = source_id
+        self.total_ingests += 1
+        return entry, True
+
+    def release(self, source_id: Hashable) -> int | None:
+        """Drop one reference. Returns the freed entry index when the last
+        reference went away — the caller must then zero the entry's device
+        rows (``TransformerLM.release_source``) — else None."""
+        entry = self._entry.get(source_id)
+        if entry is None:
+            raise SlotPoolError(f"release of unknown source id {source_id!r}")
+        self._refs[entry] -= 1
+        if self._refs[entry] > 0:
+            return None
+        del self._refs[entry]
+        del self._entry[source_id]
+        del self._sid[entry]
+        self._free.append(entry)
+        return entry
+
+    def reset_stats(self) -> None:
+        self.total_ingests = len(self._entry)
+        self.total_shares = 0
+
+    # ---- invariants -------------------------------------------------------
+    def assert_consistent(self) -> None:
+        assert len(self._free) + len(self._entry) == self.n_entries, \
+            (self._free, self._entry)
+        assert len(set(self._free)) == len(self._free), "free-list duplicates"
+        assert set(self._entry.values()) == set(self._refs), "ledger skew"
+        assert not (set(self._free) & set(self._refs)), "entry both free+held"
+        assert all(r > 0 for r in self._refs.values()), "zero-ref entry held"

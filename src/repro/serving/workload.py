@@ -16,21 +16,40 @@ def poisson_trace(*, n_requests: int, vocab_size: int,
                   rate: float | None = None,
                   prompt_len: tuple[int, int] = (8, 48),
                   max_new: tuple[int, int] = (4, 128),
-                  seed: int = 0) -> list[Request]:
+                  seed: int = 0,
+                  source_len: tuple[int, int] | None = None,
+                  source_dim: int = 0,
+                  source_share: int = 0) -> list[Request]:
     """Ragged trace: prompt lengths and output budgets drawn uniformly from
     their ranges (mixed-length — the shape production traffic actually has),
-    arrivals Poisson at ``rate`` req/s (``None``: all backlogged at t=0)."""
+    arrivals Poisson at ``rate`` req/s (``None``: all backlogged at t=0).
+
+    ``source_len`` + ``source_dim`` attach a cross-attention source to every
+    request: ``[L, source_dim]`` float32 features with L drawn uniformly
+    from the range — *heterogeneous* encoder lengths, the shape mixed
+    vision/audio traffic has. ``source_share`` > 1 reuses each generated
+    source (and its ``source_id``) across that many consecutive requests —
+    e.g. N questions about one image — exercising the source-KV pool's
+    refcounted dedup."""
     rng = np.random.default_rng(seed)
     arrivals = (np.zeros(n_requests) if rate is None
                 else np.cumsum(rng.exponential(1.0 / rate, n_requests)))
     reqs = []
+    src, sid = None, None
     for i in range(n_requests):
         p = int(rng.integers(prompt_len[0], prompt_len[1], endpoint=True))
+        if source_len is not None and source_dim:
+            if src is None or source_share < 2 or i % source_share == 0:
+                ln = int(rng.integers(source_len[0], source_len[1],
+                                      endpoint=True))
+                src = (rng.standard_normal((ln, source_dim))
+                       .astype(np.float32) * 0.02)
+                sid = f"src-{i}" if source_share > 1 else None
         reqs.append(Request(
             prompt=rng.integers(0, vocab_size, p).astype(np.int32),
             max_new_tokens=int(rng.integers(max_new[0], max_new[1],
                                             endpoint=True)),
-            rid=i, arrival=float(arrivals[i])))
+            rid=i, arrival=float(arrivals[i]), source=src, source_id=sid))
     return reqs
 
 

@@ -1,0 +1,69 @@
+"""Docs build/link check: every markdown link and anchor in README.md and
+docs/*.md must resolve — a renamed file or retitled section breaks CI here,
+not silently in a reader's browser. Kept dependency-free (no docs
+toolchain in the image): links are extracted with a regex and anchors are
+checked against GitHub-style heading slugs.
+"""
+from __future__ import annotations
+
+import re
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parents[1]
+DOCS = [ROOT / "README.md", *sorted((ROOT / "docs").glob("*.md"))]
+
+_LINK = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)\)")
+_HEADING = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+_CODE_FENCE = re.compile(r"```.*?```", re.DOTALL)
+
+
+def _slug(heading: str) -> str:
+    """GitHub anchor slug: lowercase, drop punctuation, spaces -> hyphens."""
+    heading = re.sub(r"[`*_]", "", heading.strip().lower())
+    heading = re.sub(r"[^\w\- ]", "", heading)
+    return heading.replace(" ", "-")
+
+
+def _anchors(path: Path) -> set[str]:
+    text = _CODE_FENCE.sub("", path.read_text())
+    return {_slug(h) for h in _HEADING.findall(text)}
+
+
+def _links(path: Path) -> list[str]:
+    return _LINK.findall(_CODE_FENCE.sub("", path.read_text()))
+
+
+def test_doc_files_exist():
+    assert (ROOT / "docs" / "serving.md").exists(), \
+        "docs/serving.md is the serving-subsystem architecture doc"
+    for doc in DOCS:
+        assert doc.exists(), doc
+
+
+@pytest.mark.parametrize("doc", DOCS, ids=lambda p: p.name)
+def test_markdown_links_resolve(doc):
+    for target in _links(doc):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue                     # external: not checked offline
+        path_part, _, anchor = target.partition("#")
+        dest = doc if not path_part else (doc.parent / path_part).resolve()
+        assert dest.exists(), f"{doc.name}: broken link -> {target}"
+        if anchor:
+            assert dest.suffix == ".md", \
+                f"{doc.name}: anchor on non-markdown target {target}"
+            assert anchor in _anchors(dest), \
+                f"{doc.name}: dangling anchor -> {target}"
+
+
+@pytest.mark.parametrize("doc", DOCS, ids=lambda p: p.name)
+def test_referenced_repo_paths_exist(doc):
+    """Backtick-quoted repo paths (src/..., tests/..., benchmarks/...,
+    docs/...) in the docs must exist — the cheap guard against docs
+    drifting from a refactor."""
+    text = _CODE_FENCE.sub("", doc.read_text())
+    for m in re.finditer(
+            r"`((?:src|tests|benchmarks|docs|examples)/[\w./\-]+?)`", text):
+        path = m.group(1).rstrip(".")
+        assert (ROOT / path).exists(), f"{doc.name}: stale path `{path}`"

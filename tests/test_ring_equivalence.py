@@ -149,10 +149,43 @@ def test_ring_kv_bytes_per_slot_scale_with_ring():
             == full["kv_bytes_per_slot"] * RING_LEN)
 
 
-def test_ring_rejects_oversized_prefill_chunk():
-    """The chunked-prefill exactness bound (ring_len >= window + chunk - 1)
-    is enforced at engine construction, not discovered as corruption."""
-    import pytest
-    with pytest.raises(ValueError, match="ring"):
-        ContinuousBatchingEngine(MODEL_RING, PARAMS, n_slots=1,
-                                 max_len=MAX_LEN, chunk=128)
+def test_ring_sizes_to_window_plus_chunk():
+    """The engine sizes rings as round128(window + chunk) at construction
+    (init_cache(chunk=...)), so the chunked-prefill exactness bound
+    ring_len >= window + chunk - 1 holds *by construction* instead of
+    rejecting large chunks. A chunk that pushes past max_len degenerates
+    the ring to the never-wrapping full cache — larger, still exact."""
+    # window 32, chunk 8 -> round128(40) = 128: the O(window) ring
+    eng = ContinuousBatchingEngine(MODEL_RING, PARAMS, n_slots=1,
+                                   max_len=MAX_LEN, chunk=8)
+    assert eng.cache["k"].shape[2] == RING_LEN
+    # window 32, chunk 128 -> round128(160) = 256 == max_len: full cache,
+    # no wrap, no rejection (this used to raise)
+    eng = ContinuousBatchingEngine(MODEL_RING, PARAMS, n_slots=1,
+                                   max_len=MAX_LEN, chunk=128)
+    assert eng.cache["k"].shape[2] == MAX_LEN
+
+
+def test_ring_window_just_under_128_boundary_accepts_large_chunks():
+    """Regression (ROADMAP open item): a window just under a 128 boundary
+    used to leave < chunk slack — round128(window + 1) == 128 supports
+    chunks only up to 128 - window + 1 — so the engine rejected large
+    chunks. Sizing off window + chunk takes the next 128 step instead, and
+    the config serves exactly (greedy == per-request on a wrapping
+    trace)."""
+    cfg = CFG_RING.replace(window=120)
+    model = build_model(cfg)
+    eng = ContinuousBatchingEngine(model, PARAMS, n_slots=1, max_len=512,
+                                   chunk=64)
+    # round128(120 + 64) = 256: holds the bound with room, still < max_len
+    assert eng.cache["k"].shape[2] == 256
+    assert 64 <= 256 - 120 + 1          # the exactness bound, explicitly
+    # and it *serves*: prompt > ring wraps chunked prefill; outputs match
+    # the full-cache per-request reference token for token
+    full = build_model(cfg.replace(kv_ring=False))
+    prompt = np.arange(300, dtype=np.int32) % cfg.vocab_size
+    ref = ServingEngine(full, PARAMS, max_len=512, batch=1)
+    want = np.asarray(ref.generate(jnp.asarray(prompt)[None],
+                                   steps=8))[0].tolist()
+    rep = eng.run([Request(prompt=prompt, max_new_tokens=8, rid="r")])
+    assert rep["requests"][0]["tokens"] == want

@@ -2,9 +2,10 @@
 
 ONE parametrized harness runs the same assertions over EVERY config that
 claims ``supports_ragged_serving()`` — the dense KV stacks (MHA / GQA /
-SWA), the recurrent-state families (ssm / hybrid), MoE, *and* the ring-KV
-SWA variants (``<arch>+ring``: O(window) per-slot caches) — with zero
-per-family test duplication:
+SWA), the recurrent-state families (ssm / hybrid), MoE, the ring-KV
+SWA variants (``<arch>+ring``: O(window) per-slot caches), *and* the
+cross-attention stacks (vlm / audio, served through the source-KV pool) —
+with zero per-family test duplication:
 
   * greedy token-for-token equivalence vs per-request lock-step generation
     at ``decode_ticks`` 1 and 8 (the single-tick and fused-block engines);
@@ -13,14 +14,21 @@ per-family test duplication:
   * device-state zeroing after ``release_slot`` (lengths, recurrent state,
     and ring KV rows all return to the empty-context state).
 
-The suite also pins the *gated* set: the only configs allowed to refuse
-continuous batching are the cross-attention stacks (vlm / audio — per-slot
-source KV would need its own pool). A config that claims support but
-raises mid-flight, or a config that silently joins the gated set, fails
-here. Ring variants serve a trace whose prompts all exceed the ring itself
-(not just the window), so chunked prefill wraps on every request — the
-harness asserts this against the reported ring size — and the position
-budgets wrap the ring again during decode.
+The suite also pins the *gated* set: it is **empty** — every config serves
+ragged. A config that claims support but raises mid-flight, or a config
+that silently starts refusing, fails here. Ring variants serve a trace
+whose prompts all exceed the ring itself (not just the window), so chunked
+prefill wraps on every request — the harness asserts this against the
+reported ring size — and the position budgets wrap the ring again during
+decode.
+
+Cross-attention stacks additionally run a source-bearing section (the
+shared harness above drives them sourceless — cross terms exactly zero on
+both engines): greedy equivalence and seeded replay over traces with
+*heterogeneous* source lengths and shared source ids (pool dedup), plus
+the source-KV pool's release contract — a retired request's entry rows
+are zeroed once its last holder leaves, and a backfilled request never
+reads its predecessor's encoder state.
 """
 from __future__ import annotations
 
@@ -81,18 +89,17 @@ def _trace(cfg, spec, *, n=4, seed=5, gens=None, rate=None):
 
 
 # ---------------------------------------------------------------------------
-# the gated set is cross-attention stacks, exactly
+# the gated set is empty: every family serves ragged
 # ---------------------------------------------------------------------------
 
-def test_gated_set_is_cross_attention_only():
-    assert set(GATED) == {"llama32_vision_90b", "whisper_small"}, (
-        "supports_ragged_serving() gates must cover exactly the "
-        "cross-attention stacks (per-slot source KV is not poolable yet)")
-    for arch in GATED:
-        model = build_model(get_config(arch, reduced=True))
-        with pytest.raises(ValueError):
-            ContinuousBatchingEngine(model, {}, n_slots=2, max_len=32,
-                                     chunk=8)
+def test_gated_set_is_empty():
+    """Cross-attention stacks were the last gated family; the source-KV
+    pool (encoder-side K/V ingested once per source id, shared read-only
+    across a request's decode ticks) lifted that, so every config now
+    claims — and is held to, by the harness below — ragged serving."""
+    assert GATED == [], (
+        "supports_ragged_serving() must hold for every config — the "
+        f"gated set is pinned empty, got {GATED}")
 
 
 # ---------------------------------------------------------------------------
@@ -186,3 +193,141 @@ def test_release_zeroes_slot_state(arch):
     for key in zeroed:
         if key in cache:
             assert not np.any(np.asarray(cache[key])), (arch, key)
+
+
+# ---------------------------------------------------------------------------
+# cross-attention stacks: the source-KV pool properties (vlm / audio)
+# ---------------------------------------------------------------------------
+
+XATTN = ["llama32_vision_90b", "whisper_small"]
+
+
+def _source_trace(cfg, *, n=4, seed=11, rate=None):
+    """Source-bearing trace with heterogeneous encoder lengths AND a shared
+    source id: requests 1 and 3 present the same (id, features) pair, the
+    rest carry private sources of different lengths — so one trace
+    exercises per-slot length masking, pool dedup, and entry reuse."""
+    rng = np.random.default_rng(seed)
+    src_max = cfg.source_len
+    shared = (rng.standard_normal((src_max - 4, cfg.d_model))
+              .astype(np.float32) * 0.02)
+    arrivals = (np.zeros(n) if rate is None
+                else np.cumsum(rng.exponential(1.0 / rate, n)))
+    reqs = []
+    for i in range(n):
+        if i % 2:
+            src, sid = shared, "shared-src"
+        else:
+            ln = int(rng.integers(4, src_max + 1))
+            src = (rng.standard_normal((ln, cfg.d_model))
+                   .astype(np.float32) * 0.02)
+            sid = None
+        p = int(rng.integers(3, 18))
+        reqs.append(Request(
+            prompt=rng.integers(0, cfg.vocab_size, p).astype(np.int32),
+            max_new_tokens=int(rng.integers(3, 12)), rid=i,
+            arrival=float(arrivals[i]), source=src, source_id=sid))
+    return reqs
+
+
+def _per_request_with_source(cfg, model, params, reqs, *, max_len=64):
+    """Per-request lock-step reference: each source padded to the pool row
+    size and masked to its true length — the identical padded+masked math
+    the continuous engine's ingest runs, so equality is exact."""
+    src_max = cfg.source_len
+    ref = ServingEngine(model, params, max_len=max_len, batch=1,
+                        source_len=src_max)
+    want = {}
+    for r in reqs:
+        pad = np.zeros((1, src_max, cfg.d_model), np.float32)
+        pad[0, :len(r.source)] = r.source
+        want[r.rid] = np.asarray(ref.generate(
+            jnp.asarray(r.prompt)[None], steps=r.max_new_tokens,
+            source=jnp.asarray(pad),
+            source_len=jnp.asarray([len(r.source)], jnp.int32)))[0].tolist()
+    return want
+
+
+@pytest.mark.parametrize("ticks", [1, 8])
+@pytest.mark.parametrize("arch", XATTN)
+def test_xattn_greedy_matches_per_request_with_sources(arch, ticks):
+    """Continuous cross-attention serving == per-request generation,
+    token for token, on a trace whose rows carry *different* encoder
+    lengths (coexisting in one static-shape dispatch) and a shared source
+    id. The shared pair overlapping in flight must be served by ONE pooled
+    ingest (the refcount share is asserted, not assumed)."""
+    cfg, model, params = _get(arch)
+    reqs = _source_trace(cfg)
+    want = _per_request_with_source(cfg, model, params, reqs)
+    eng = ContinuousBatchingEngine(model, params, n_slots=4, max_len=64,
+                                   chunk=8, decode_ticks=ticks)
+    report = eng.run(list(reqs))
+    got = {r["rid"]: r["tokens"] for r in report["requests"]}
+    assert got == want, (arch, ticks)
+    agg = report["aggregate"]
+    assert agg["n_retired"] == len(reqs) and agg["n_rejected"] == 0
+    # all 4 slots admitted at once -> the shared pair overlapped in flight:
+    # its second request must have ridden the first's entry
+    assert agg["source_ingests"] == 3 and agg["source_shares"] == 1, agg
+
+
+@pytest.mark.parametrize("arch", XATTN)
+def test_xattn_seeded_sampling_replays_with_sources(arch):
+    """Seeded sampling over source-bearing traces is a function of
+    (seed, trace) only — timed arrivals perturb how ingests, prefill
+    chunks, and decode blocks interleave, never a draw."""
+    cfg, model, params = _get(arch)
+    reqs = _source_trace(cfg, n=3, seed=13, rate=100.0)
+
+    def run(seed):
+        eng = ContinuousBatchingEngine(model, params, n_slots=2, max_len=64,
+                                       chunk=8, temperature=0.8, seed=seed,
+                                       decode_ticks=4)
+        rep = eng.run(list(reqs))
+        return {r["rid"]: r["tokens"] for r in rep["requests"]}
+
+    first = run(7)
+    assert run(7) == first, arch
+    assert run(8) != first, arch
+
+
+@pytest.mark.parametrize("arch", XATTN)
+def test_xattn_release_zeroes_source_entries(arch):
+    """After every request retires, the source-KV pool is all-zeros:
+    entry K/V rows, src_len, and (trivially) nothing holds a reference —
+    the uniform reset-on-release contract extended to the second pool."""
+    cfg, model, params = _get(arch)
+    eng = ContinuousBatchingEngine(model, params, n_slots=2, max_len=64,
+                                   chunk=8, decode_ticks=4)
+    report = eng.run(_source_trace(cfg, n=3, seed=17))
+    assert report["aggregate"]["n_retired"] == 3
+    assert eng.src_pool.n_free == eng.src_pool.n_entries
+    cache = eng.cache
+    for key in ("src_k", "src_v", "src_len"):
+        assert not np.any(np.asarray(cache[key])), (arch, key)
+
+
+@pytest.mark.parametrize("arch", XATTN)
+def test_xattn_backfill_never_reads_predecessor_source(arch):
+    """Entry-reuse isolation: request B backfills the slot (and pool
+    entry) request A just vacated, with a *shorter* source — B's stream
+    must equal its per-request generation exactly, i.e. nothing of A's
+    encoder state (which occupied rows beyond B's length) leaks through
+    the masked read. With n_slots=1 the reuse is forced, not incidental."""
+    cfg, model, params = _get(arch)
+    src_max = cfg.source_len
+    rng = np.random.default_rng(23)
+    src_a = rng.standard_normal((src_max, cfg.d_model)).astype(np.float32)
+    src_b = (rng.standard_normal((4, cfg.d_model)).astype(np.float32)
+             * 5.0)   # short + loud: a leak would move logits
+    reqs = [Request(prompt=rng.integers(0, cfg.vocab_size, 5).astype(np.int32),
+                    max_new_tokens=4, rid="a", source=src_a),
+            Request(prompt=rng.integers(0, cfg.vocab_size, 7).astype(np.int32),
+                    max_new_tokens=6, rid="b", source=src_b)]
+    want = _per_request_with_source(cfg, model, params, reqs)
+    eng = ContinuousBatchingEngine(model, params, n_slots=1, max_len=64,
+                                   chunk=8)
+    report = eng.run(list(reqs))
+    got = {r["rid"]: r["tokens"] for r in report["requests"]}
+    assert got == want, arch
+    assert report["aggregate"]["source_ingests"] == 2

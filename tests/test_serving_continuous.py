@@ -15,7 +15,7 @@ from repro.configs import get_config
 from repro.models.api import build_model
 from repro.serving import (ContinuousBatchingEngine, KVSlotPool, Request,
                            Scheduler, ServingEngine, SlotPoolError,
-                           poisson_trace)
+                           SourceKVPool, poisson_trace)
 from repro.serving.continuous import _pct
 
 jax.config.update("jax_platform_name", "cpu")
@@ -61,6 +61,39 @@ def test_slot_pool_misuse_raises():
     with pytest.raises(SlotPoolError):
         pool.set_length(s, pool.capacity + 1)     # over capacity
     assert not pool.fits(pool.capacity + 1) and pool.fits(pool.capacity)
+
+
+# ---------------------------------------------------------------------------
+# source-KV pool (host ledger; device-side contract in the conformance suite)
+# ---------------------------------------------------------------------------
+
+def test_source_pool_refcounted_sharing():
+    pool = SourceKVPool(2, src_max=16)
+    e0, fresh = pool.acquire("img-a")
+    assert fresh and pool.refcount(e0) == 1       # first holder ingests
+    e1, fresh = pool.acquire("img-a")
+    assert e1 == e0 and not fresh                 # second shares, no ingest
+    assert pool.refcount(e0) == 2 and pool.total_shares == 1
+    e2, fresh = pool.acquire("img-b")
+    assert fresh and e2 != e0 and pool.n_free == 0
+    assert pool.acquire("img-c") == (None, False)  # exhausted
+    assert pool.release("img-a") is None          # one holder remains
+    assert pool.entry_of("img-a") == e0           # still resident
+    assert pool.release("img-a") == e0            # last holder -> zero me
+    assert pool.entry_of("img-a") is None and pool.n_free == 1
+    # freed entry is reusable under a new id; stats count both ingests
+    e3, fresh = pool.acquire("img-d")
+    assert fresh and e3 == e0 and pool.total_ingests == 3
+    pool.assert_consistent()
+
+
+def test_source_pool_misuse_and_fits():
+    pool = SourceKVPool(1, src_max=8)
+    with pytest.raises(SlotPoolError):
+        pool.release("never-acquired")
+    assert pool.fits(0) and pool.fits(8) and not pool.fits(9)
+    with pytest.raises(SlotPoolError):
+        SourceKVPool(0, src_max=8)
 
 
 def test_slot_pool_reserves_parking_row():
@@ -182,24 +215,49 @@ def test_continuous_respects_slot_capacity(dense_model):
     assert st.status == "rejected"                 # 38 rows > capacity 31
 
 
-def test_continuous_gates_cross_attention_only():
-    """Ring KV caches are no longer gated: the parked write that used to
-    need a reserved tail row is a per-slot write mask now, so an SWA arch
-    with kv_ring constructs (and serves — test_serving_conformance.py runs
-    the full equivalence harness over the +ring variants). The one
-    remaining gate is cross-attention stacks, whose per-slot source KV
-    would need its own pool."""
+def test_continuous_construction_gate_is_empty():
+    """No family is gated from continuous batching any more. Ring KV caches
+    construct (per-slot write-mask parking, O(window) rows), and
+    cross-attention stacks construct too: their encoder-side K/V lives in
+    the source-KV pool (``cache['src_k'|'src_v'|'src_len'|'src_index']``),
+    keyed by source id on the host side. test_serving_conformance.py runs
+    the full equivalence harness over every config."""
     cfg = get_config("h2o-danube-1.8b+ring", reduced=True)
     model = build_model(cfg)
     params = model.init_params(jax.random.PRNGKey(0))
     eng = ContinuousBatchingEngine(model, params, n_slots=2, max_len=256,
                                    chunk=8)                # constructs fine
     assert eng.cache["k"].shape[2] == 128 < 256            # O(window) rows
-    # audio (encoder-decoder cross-attention): per-slot source KV unpooled
+    # audio (encoder-decoder): source-KV pool allocated, one entry per slot
     wcfg = get_config("whisper-small", reduced=True)
     wmodel = build_model(wcfg)
-    with pytest.raises(ValueError):
-        ContinuousBatchingEngine(wmodel, {}, n_slots=2, max_len=32, chunk=8)
+    wparams = wmodel.init_params(jax.random.PRNGKey(0))
+    weng = ContinuousBatchingEngine(wmodel, wparams, n_slots=2, max_len=32,
+                                    chunk=8)
+    assert weng.src_pool is not None and weng.src_pool.n_entries == 2
+    assert weng.cache["src_k"].shape[:3] == (wcfg.n_layers, 2,
+                                             wcfg.source_len)
+    assert weng.cache["src_index"].shape == (2,)
+
+
+def test_continuous_rejects_oversized_source():
+    """A source longer than the source-KV pool rows is rejected at submit
+    (same graceful path as a prompt exceeding slot capacity), not
+    discovered as an ingest-time shape error."""
+    wcfg = get_config("whisper-small", reduced=True)
+    wmodel = build_model(wcfg)
+    wparams = wmodel.init_params(jax.random.PRNGKey(0))
+    eng = ContinuousBatchingEngine(wmodel, wparams, n_slots=1, max_len=32,
+                                   chunk=8)
+    big = np.zeros((wcfg.source_len + 1, wcfg.d_model), np.float32)
+    st = eng.submit(Request(prompt=np.zeros(4, np.int32), max_new_tokens=2,
+                            rid="big-src", source=big))
+    assert st.status == "rejected" and "source" in st.finish_reason
+    # a shared source id with no features would poison the pool entry
+    # (src_len 0) for every later holder of the same id — rejected up front
+    st = eng.submit(Request(prompt=np.zeros(4, np.int32), max_new_tokens=2,
+                            rid="id-no-src", source_id="img-1"))
+    assert st.status == "rejected" and "source_id" in st.finish_reason
 
 
 def test_fused_sampler_seeded_reproducible(dense_model):
