@@ -1,0 +1,212 @@
+"""CI perf-regression gate: compare a fresh BENCH JSON against a checked-in
+baseline with per-metric tolerances.
+
+The serving bench legs already gate an absolute floor (``--check``:
+speedup >= 1.3x) and correctness (``--verify``); what they could not catch
+is a *relative* regression — PR N+1 quietly dropping PR 3's 2.26x to 1.5x,
+or dispatches/token creeping up, while still clearing the floor. This
+script closes that hole: every perf-smoke leg runs it against
+``benchmarks/baselines/<same filename>`` after the bench.
+
+Checks, per arch entry:
+
+* ``speedup_tokens_per_s`` — the machine-normalized throughput ratio
+  (continuous / lock-step on the same host, so CI hardware variance mostly
+  cancels): fresh must be >= baseline * (1 - 25%);
+* ``dispatches_per_token`` — deterministic for a backlogged trace: fresh
+  must be <= baseline * (1 + 2%);
+* ``generated_tokens`` — exact: the trace and greedy outputs are seeded,
+  so any drift means the workload or the model changed under the bench;
+* ``verify`` — ``verify_mismatched_rids`` must be empty whenever present;
+* ``telemetry overhead`` — when the fresh entry carries a telemetry
+  section (``--trace-out`` runs), enabled-vs-disabled throughput must be
+  within 3% and tokens identical.
+
+Schema guard: entries are stamped (``schema_version``, config, seed, jax
+version, git describe — see ``serving_bench.py``); a fresh/baseline
+``schema_version`` mismatch, or differing trace parameters (arch, seed,
+slots, lengths, ticks), is a **refusal** (exit 2, the numbers are not
+comparable), distinct from a regression (exit 1).
+
+Output: a readable per-metric diff table plus a machine-readable JSON
+verdict on the last stdout line (and to ``--json`` when given).
+
+    PYTHONPATH=src python benchmarks/check_regression.py BENCH_serving.json
+    PYTHONPATH=src python benchmarks/check_regression.py \
+        BENCH_serving_ring.json --baseline-dir benchmarks/baselines
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+SCHEMA_VERSION = 2          # bump when BENCH entry semantics change
+
+# metric -> (kind, tolerance). "min_rel": fresh >= base*(1-tol) (higher is
+# better); "max_rel": fresh <= base*(1+tol) (lower is better); "exact".
+TOLERANCES = {
+    "speedup_tokens_per_s": ("min_rel", 0.25),
+    "dispatches_per_token": ("max_rel", 0.02),
+    "generated_tokens": ("exact", 0),
+}
+TELEMETRY_OVERHEAD_MAX_PCT = 3.0
+
+# trace parameters that must be identical for the numbers to be comparable
+IDENTITY_KEYS = ("arch", "reduced", "n_slots", "n_requests", "max_len",
+                 "chunk", "decode_ticks", "prompt_len", "max_new")
+
+
+class SchemaMismatch(Exception):
+    """Fresh and baseline are not comparable (refusal, not a regression)."""
+
+
+def _entries(doc) -> list[dict]:
+    return doc if isinstance(doc, list) else [doc]
+
+
+def _deep_get(entry: dict, dotted: str):
+    cur = entry
+    for part in dotted.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            return None
+        cur = cur[part]
+    return cur
+
+
+def _require_comparable(fresh: dict, base: dict) -> None:
+    fv, bv = fresh.get("schema_version"), base.get("schema_version")
+    if fv != bv:
+        raise SchemaMismatch(
+            f"schema_version mismatch: fresh={fv} baseline={bv} — "
+            "regenerate the baseline (benchmarks/baselines/) instead of "
+            "comparing across schemas")
+    if fv != SCHEMA_VERSION:
+        raise SchemaMismatch(
+            f"schema_version {fv} unsupported by this checker "
+            f"(expects {SCHEMA_VERSION})")
+    fresh_seed = _deep_get(fresh, "meta.seed")
+    base_seed = _deep_get(base, "meta.seed")
+    if fresh_seed != base_seed:
+        raise SchemaMismatch(
+            f"trace seed differs (fresh={fresh_seed} baseline={base_seed})")
+    for key in IDENTITY_KEYS:
+        if fresh.get(key) != base.get(key):
+            raise SchemaMismatch(
+                f"{fresh.get('arch')}: bench parameter {key!r} differs "
+                f"(fresh={fresh.get(key)!r} baseline={base.get(key)!r}) — "
+                "the traces are not the same workload")
+
+
+def compare_entry(fresh: dict, base: dict) -> list[dict]:
+    """Per-metric checks for one arch entry; raises SchemaMismatch when the
+    two entries are not comparable at all."""
+    _require_comparable(fresh, base)
+    checks = []
+
+    def add(metric, f, b, limit, ok, note=""):
+        checks.append({"arch": fresh.get("arch"), "metric": metric,
+                       "fresh": f, "baseline": b, "limit": limit,
+                       "ok": bool(ok), "note": note})
+
+    for metric, (kind, tol) in TOLERANCES.items():
+        f = fresh.get(metric, _deep_get(fresh, f"continuous.{metric}"))
+        b = base.get(metric, _deep_get(base, f"continuous.{metric}"))
+        if f is None or b is None:
+            add(metric, f, b, None, False, "metric missing")
+            continue
+        if kind == "min_rel":
+            limit = round(b * (1 - tol), 4)
+            add(metric, f, b, f">= {limit}", f >= limit,
+                f"-{tol:.0%} of baseline")
+        elif kind == "max_rel":
+            limit = round(b * (1 + tol), 4)
+            add(metric, f, b, f"<= {limit}", f <= limit,
+                f"+{tol:.0%} of baseline")
+        else:
+            add(metric, f, b, f"== {b}", f == b, "exact")
+
+    bad = fresh.get("verify_mismatched_rids")
+    if bad is not None:
+        add("verify_mismatched", len(bad), 0, "== 0", len(bad) == 0,
+            str(bad) if bad else "")
+
+    tel = fresh.get("telemetry")
+    if tel is not None:
+        add("telemetry_overhead_pct", tel.get("overhead_pct"), None,
+            f"<= {TELEMETRY_OVERHEAD_MAX_PCT}",
+            (tel.get("overhead_pct") is not None
+             and tel["overhead_pct"] <= TELEMETRY_OVERHEAD_MAX_PCT),
+            "enabled vs disabled throughput")
+        add("telemetry_tokens_identical", tel.get("tokens_identical"), True,
+            "== True", tel.get("tokens_identical") is True, "")
+    return checks
+
+
+def compare(fresh_doc, base_doc) -> list[dict]:
+    base_by_arch = {e.get("arch"): e for e in _entries(base_doc)}
+    checks = []
+    for entry in _entries(fresh_doc):
+        arch = entry.get("arch")
+        if arch not in base_by_arch:
+            raise SchemaMismatch(
+                f"no baseline entry for arch {arch!r} "
+                f"(baseline has {sorted(base_by_arch)})")
+        checks.extend(compare_entry(entry, base_by_arch[arch]))
+    return checks
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("fresh", help="freshly generated BENCH JSON")
+    ap.add_argument("--baseline", default=None,
+                    help="baseline JSON (default: --baseline-dir/<name>)")
+    ap.add_argument("--baseline-dir",
+                    default=str(Path(__file__).parent / "baselines"))
+    ap.add_argument("--json", default=None,
+                    help="also write the machine-readable verdict here")
+    args = ap.parse_args(argv)
+
+    fresh_path = Path(args.fresh)
+    base_path = Path(args.baseline) if args.baseline else (
+        Path(args.baseline_dir) / fresh_path.name)
+    verdict = {"fresh": str(fresh_path), "baseline": str(base_path),
+               "pass": False, "refused": None, "checks": []}
+
+    try:
+        if not base_path.exists():
+            raise SchemaMismatch(f"baseline {base_path} does not exist")
+        checks = compare(json.loads(fresh_path.read_text()),
+                         json.loads(base_path.read_text()))
+    except SchemaMismatch as e:
+        verdict["refused"] = str(e)
+        print(f"[check_regression] REFUSED: {e}", file=sys.stderr)
+        print(json.dumps(verdict))
+        if args.json:
+            Path(args.json).write_text(json.dumps(verdict, indent=1))
+        return 2
+
+    verdict["checks"] = checks
+    verdict["pass"] = all(c["ok"] for c in checks)
+    print(f"[check_regression] {fresh_path.name} vs {base_path}")
+    arch = None
+    for c in checks:
+        if c["arch"] != arch:
+            arch = c["arch"]
+            print(f"  {arch}:")
+        mark = "OK  " if c["ok"] else "FAIL"
+        note = f"  ({c['note']})" if c["note"] else ""
+        print(f"    [{mark}] {c['metric']:<26} {c['fresh']!r:>10} "
+              f"vs baseline {c['baseline']!r} (want {c['limit']}){note}")
+    n_bad = sum(not c["ok"] for c in checks)
+    print(f"  {'PASS' if verdict['pass'] else 'FAIL'}: "
+          f"{len(checks) - n_bad}/{len(checks)} checks passed")
+    print(json.dumps(verdict))
+    if args.json:
+        Path(args.json).write_text(json.dumps(verdict, indent=1))
+    return 0 if verdict["pass"] else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -39,7 +39,7 @@ from repro.configs import get_config
 from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.models.api import build_model, needs_source
 from repro.serving import (ContinuousBatchingEngine, ServingEngine,
-                           load_trace, poisson_trace)
+                           Telemetry, load_trace, poisson_trace)
 
 log = logging.getLogger("repro.launch.serve")
 
@@ -81,6 +81,13 @@ def main(argv=None):
                     help="continuous: JSON trace file instead of Poisson")
     ap.add_argument("--eos-id", type=int, default=None)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace-out", default=None,
+                    help="continuous: write the run's telemetry as a "
+                         "Chrome/Perfetto trace (open the .trace.json at "
+                         "https://ui.perfetto.dev — one lane per slot)")
+    ap.add_argument("--events-out", default=None,
+                    help="continuous: stream raw telemetry events as JSONL "
+                         "(convert later with tools/trace_viewer.py)")
     args = ap.parse_args(argv)
 
     logging.basicConfig(level=logging.INFO)
@@ -155,14 +162,22 @@ def _run_continuous(args, cfg, model, params, mesh):
                                         args.prompt_len),
             max_new=(min(4, args.gen), args.gen), seed=args.seed, **src_kw)
 
+    telemetry = (Telemetry(jsonl_path=args.events_out)
+                 if (args.trace_out or args.events_out) else None)
     with mesh:
         eng = ContinuousBatchingEngine(
             model, params, n_slots=n_slots, max_len=max_len,
             chunk=args.chunk, eos_id=args.eos_id,
             temperature=args.temperature, seed=args.seed,
-            decode_ticks=args.decode_ticks)
+            decode_ticks=args.decode_ticks, telemetry=telemetry)
         eng.warmup()
         report = eng.run(trace)
+    if telemetry is not None:
+        if args.trace_out:
+            path = telemetry.write_chrome_trace(args.trace_out)
+            log.info("wrote Perfetto trace (%d events) -> %s",
+                     len(telemetry.events), path)
+        telemetry.close()
 
     metrics = {"arch": args.arch, "mode": "continuous", "n_slots": n_slots,
                "max_len": max_len, "chunk": args.chunk,

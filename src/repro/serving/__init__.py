@@ -1,9 +1,13 @@
 from .engine import ServingEngine
 from .slot_pool import KVSlotPool, SlotPoolError, SourceKVPool
 from .scheduler import Request, RequestState, Scheduler
+from .telemetry import Event, LogHistogram, Telemetry, load_events_jsonl
+from .trace import chrome_trace, write_chrome_trace
 from .continuous import ContinuousBatchingEngine
 from .workload import load_trace, poisson_trace
 
 __all__ = ["ServingEngine", "ContinuousBatchingEngine", "KVSlotPool",
            "SlotPoolError", "SourceKVPool", "Request", "RequestState",
-           "Scheduler", "load_trace", "poisson_trace"]
+           "Scheduler", "Event", "LogHistogram", "Telemetry",
+           "load_events_jsonl", "chrome_trace", "write_chrome_trace",
+           "load_trace", "poisson_trace"]

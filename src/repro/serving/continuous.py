@@ -75,12 +75,28 @@ independent of batch composition, of how prefill chunks and decode blocks
 interleave, *and of K itself*: the same (seed, trace) replays
 token-for-token at decode_ticks 1, 4, or 8.
 
-Timestamps are **block-granular**: every token in a K-block is stamped when
-the block's sync completes, so per-token ITL percentiles quantize to
-~K-token blocks at decode_ticks > 1. ``itl_effective_ms`` (wall seconds per
-generated token) is the honest per-token latency figure; the report carries
-a note saying so. Dispatch accounting (``dispatches``, ``host_syncs``,
-``dispatches_per_token``) makes the round-trip collapse measurable.
+Host syncs are **block-granular**: a K-block's tokens all become available
+at the block's one sync. Per-token timestamps inside a block are attributed
+by **even subdivision** of the block's wall span (token at tick t stamped
+``block_start + (t+1)/K * span``; labeled ``itl_source: "subdivided"`` in
+the report), so ITL percentiles estimate per-token latency instead of
+quantizing to ~K-token blocks; ``itl_effective_ms`` (wall seconds per
+generated token) remains the exact denominator. TTFT / ITL percentiles come
+from fixed-size mergeable log-bucket histograms
+(``repro.serving.telemetry.LogHistogram`` — O(1) insert, exact to within
+one ~15% bucket), not unbounded sorted lists. Dispatch accounting
+(``dispatches``, ``host_syncs``, ``dispatches_per_token``) makes the
+round-trip collapse measurable, and ``parked_ticks`` (ticks issued minus
+tokens emitted) measures the mid-block-retirement waste the eos-aware
+horizon would recover.
+
+Observability: pass ``telemetry=Telemetry()`` to record the structured
+lifecycle event stream (enqueue/admit/backfill, source pool ledger events,
+prefill_chunk, first_token, decode_block, eos/budget_retire/release) plus
+per-block engine gauges, exportable to Chrome/Perfetto trace format — see
+``repro.serving.telemetry`` and ``docs/serving.md``. Every emission site is
+guarded, so the default (``telemetry=None``) path is the exact
+pre-telemetry host loop: byte-identical tokens, zero events.
 """
 from __future__ import annotations
 
@@ -95,12 +111,18 @@ from repro.models.transformer import seeded_gumbel_pick
 
 from .scheduler import Request, RequestState, Scheduler
 from .slot_pool import KVSlotPool, SourceKVPool
+from .telemetry import LogHistogram, Telemetry
 
 
 def _pct(xs, q):
     """Nearest-rank percentile of an ascending-sorted list: element
     ceil(q*n)-1 (so p50 of [a, b] is a, and p95 only hits the max within
-    5% of the tail) — truncation indexing overshoots on short lists."""
+    5% of the tail) — truncation indexing overshoots on short lists.
+
+    ``report()`` now takes its percentiles from the fixed-size
+    ``LogHistogram`` stream instead of unbounded sorted lists; this exact
+    form remains the reference the histogram is tested against
+    (``tests/test_telemetry.py``: agreement within one bucket)."""
     if not xs:
         return None
     return round(float(xs[max(0, math.ceil(q * len(xs)) - 1)]), 4)
@@ -110,7 +132,8 @@ class ContinuousBatchingEngine:
     def __init__(self, model, params, *, n_slots: int, max_len: int,
                  chunk: int = 16, eos_id: int | None = None,
                  pad_id: int = 0, temperature: float = 0.0, seed: int = 0,
-                 decode_ticks: int = 1, source_len: int | None = None):
+                 decode_ticks: int = 1, source_len: int | None = None,
+                 telemetry: Telemetry | None = None):
         if not getattr(model, "supports_ragged_serving", lambda: False)():
             raise ValueError(
                 f"{model.cfg.name}: model does not claim ragged serving "
@@ -125,8 +148,20 @@ class ContinuousBatchingEngine:
         self.temperature = temperature
         self.max_ticks = decode_ticks
         self._t0 = time.perf_counter()          # reset by run()
+        # telemetry: self._sink is None when disabled, so every emission
+        # site below is a single falsy check — the disabled path runs the
+        # exact pre-telemetry host loop (no event objects, no indirection)
+        self.tel = telemetry
+        if telemetry is None:
+            self._sink = None
+        else:
+            def _sink(kind, t=None, **data):
+                telemetry.emit(
+                    kind, t=(time.perf_counter() - self._t0
+                             if t is None else t), **data)
+            self._sink = _sink
         self.pool = KVSlotPool(n_slots, max_len)
-        self.sched = Scheduler(self.pool)
+        self.sched = Scheduler(self.pool, on_event=self._sink)
         self._prefill_batched = jax.jit(model.prefill_chunks_batched,
                                         donate_argnums=(2,))
         self._finalize = jax.jit(model.finalize_slot, donate_argnums=(0,))
@@ -144,7 +179,8 @@ class ContinuousBatchingEngine:
         self.src_pool = None
         if self.needs_source:
             self.src_max = source_len or cfg.source_len
-            self.src_pool = SourceKVPool(n_slots, self.src_max)
+            self.src_pool = SourceKVPool(n_slots, self.src_max,
+                                         on_event=self._sink)
             self._srcs: dict = {}           # rid -> held source id
             self._ingest = jax.jit(model.ingest_source, donate_argnums=(2,))
             self._assign = jax.jit(model.assign_source, donate_argnums=(0,))
@@ -192,6 +228,19 @@ class ContinuousBatchingEngine:
                     f"supports chunks up to {ring_len - cfg.window + 1} "
                     "(ring_len >= window + chunk - 1 keeps chunked "
                     "prefill exact under wraparound)")
+        # gauge precompute: self-attention KV bytes per (slot, row) — the
+        # live-KV gauge is sum_over_active(min(len, rows)) * this
+        self._kv_rows = (int(self.cache["k"].shape[2])
+                         if "k" in self.cache else 0)
+        kv_self = [self.cache[k] for k in ("k", "v") if k in self.cache]
+        self._kv_row_bytes = (
+            sum(int(a.size) * a.dtype.itemsize for a in kv_self)
+            // (n_slots * self._kv_rows) if self._kv_rows else 0)
+        # streaming latency stats: fixed-size mergeable log-bucket
+        # histograms (seconds), reset per run — report() percentiles come
+        # from these, not from unbounded per-token lists
+        self.hist_ttft = LogHistogram()
+        self.hist_itl = LogHistogram()
         self.tok = np.full((n_slots,), pad_id, np.int32)
         self.active = np.zeros((n_slots,), bool)
         # per-slot sampler / retirement state, mirrored on device per block:
@@ -217,6 +266,9 @@ class ContinuousBatchingEngine:
         self.active_row_steps = 0
         self.dispatches = 0             # every jit'd program launch
         self.host_syncs = 0             # blocking device -> host transfers
+        self.issued_ticks = 0           # K * active rows, per decode block
+        self.parked_ticks = 0           # issued - emitted: mid-block-retire
+                                        # waste (eos-aware-horizon target)
 
     # ---- intake -----------------------------------------------------------
     def submit(self, request: Request, now: float = 0.0) -> RequestState:
@@ -335,6 +387,8 @@ class ContinuousBatchingEngine:
             return self.sched.pending()
 
         k = self._tick_horizon(now, deadline)
+        live_slots = np.flatnonzero(self.active)     # rows at dispatch time
+        blk_idx = self.decode_dispatches
         t_dispatch = time.perf_counter()
         toks, self.cache = self._decode_fn(k)(
             self.params, jnp.asarray(self.tok), self.cache,
@@ -344,23 +398,68 @@ class ContinuousBatchingEngine:
         self.dispatches += 1
         rows = np.asarray(toks)                  # [K, n_slots]; the ONE sync
         self.host_syncs += 1
-        # block-granularity stamp: every token in the block shares the
-        # post-sync clock (see itl_effective_ms in report())
+        # the block's tokens all became available at this one sync; stamps
+        # inside the block are attributed by even subdivision of its wall
+        # span (itl_source: "subdivided" in report())
         now_blk = time.perf_counter() - self._t0
-        per_tick = (time.perf_counter() - t_dispatch) / k
+        blk_start = t_dispatch - self._t0
+        span = now_blk - blk_start
+        per_tick = span / k
         self._tick_s = (per_tick if self._tick_s == 0.0
                         else 0.5 * self._tick_s + 0.5 * per_tick)
+        emitted_blk = 0
         for t in range(k):
             live = rows[t] >= 0                  # -1 marks parked rows
             if not live.any():
                 break                            # all rows retired mid-block
             self.decode_steps += 1
             self.active_row_steps += int(live.sum())
+            emitted_blk += int(live.sum())
+            stamp = blk_start + (t + 1) * per_tick   # == now_blk at t == k-1
             for slot in np.flatnonzero(live):
                 state = self.sched.decoding[int(slot)]
                 self.pool.advance(int(slot))
-                self._emit(state, int(rows[t, slot]), now_blk)
+                self._emit(state, int(rows[t, slot]), stamp)
+        issued = k * len(live_slots)
+        self.issued_ticks += issued
+        self.parked_ticks += issued - emitted_blk
+        if self._sink is not None:
+            self._sink(
+                "decode_block", t=now_blk, block=blk_idx, k=k,
+                dur=round(span, 6), emitted=emitted_blk,
+                parked=issued - emitted_blk,
+                slots=[int(s) for s in live_slots],
+                serials=[int(self.serial[s]) for s in live_slots],
+                tokens_per_slot=[int((rows[:k, s] >= 0).sum())
+                                 for s in live_slots])
+            self._sample_gauges(now_blk, blk_idx, k, issued - emitted_blk)
         return True
+
+    def _sample_gauges(self, t: float, block: int, k: int,
+                       parked: int) -> None:
+        """Engine gauges, sampled at each decode block's sync: occupancy /
+        queue / free-slot state, live KV bytes (rows actually holding
+        committed context, not the preallocated pool), the chosen tick
+        horizon, and this block's parked-tick waste. Rendered as counter
+        tracks in the Perfetto export."""
+        g = dict(
+            active_slots=int(self.active.sum()),
+            free_slots=self.pool.n_free,
+            queue_depth=len(self.sched.queue),
+            prefilling=len(self.sched.prefilling),
+            occupancy=round(self.pool.n_used / self.pool.n_slots, 3),
+            tick_k=k,
+            parked_ticks_block=parked,
+            parked_ticks_total=self.parked_ticks,
+            kv_bytes_live=self._kv_row_bytes * sum(
+                min(self.pool.length(int(s)), self._kv_rows)
+                for s in np.flatnonzero(self.active)),
+        )
+        if self.src_pool is not None:
+            g["src_entries_used"] = self.src_pool.n_used
+            g["src_refs"] = sum(self.src_pool.refcount(e)
+                                for e in range(self.src_pool.n_entries))
+        self._sink("gauges", t=t, block=block, **g)
 
     def _acquire_source(self, st: RequestState) -> None:
         """Resolve a newly admitted request's source-KV pool entry: bump an
@@ -374,7 +473,7 @@ class ContinuousBatchingEngine:
         req = st.request
         sid = (req.source_id if req.source_id is not None
                else ("__rid__", st.rid))
-        entry, fresh = self.src_pool.acquire(sid)
+        entry, fresh = self.src_pool.acquire(sid, owner=st.rid)
         assert entry is not None, "source pool exhausted with a free slot"
         self._srcs[st.rid] = sid
         if fresh and req.source is not None:
@@ -403,6 +502,7 @@ class ContinuousBatchingEngine:
         offs = np.zeros((n,), np.int32)
         lasts = np.zeros((n,), np.int32)
         valid = np.zeros((n,), bool)
+        sizes = [0] * n
         for i, st in enumerate(states):
             prompt = st.request.prompt
             off = st.prefilled
@@ -411,12 +511,27 @@ class ContinuousBatchingEngine:
             slots[i], offs[i] = st.slot, off
             lasts[i] = min(self.chunk - 1, max(0, len(prompt) - 1 - off))
             valid[i] = True
+            sizes[i] = int(part.size)
+        blk_idx = self.prefill_dispatches
+        t_dispatch = time.perf_counter()
         logits, self.cache = self._prefill_batched(
             self.params, jnp.asarray(toks), self.cache, jnp.asarray(slots),
             jnp.asarray(offs), jnp.asarray(lasts), jnp.asarray(valid))
         self.prefill_dispatches += 1
         self.dispatches += 1
         self.prefill_chunks += len(states)
+        if self._sink is not None:
+            # one slice per advanced slot, sharing the batched dispatch's
+            # host-side span (the program itself retires asynchronously —
+            # its device time is hidden inside the next blocking sync)
+            t_done = time.perf_counter()
+            dur = round(t_done - t_dispatch, 6)
+            t_ev = t_done - self._t0
+            for i, st in enumerate(states):
+                self._sink("prefill_chunk", t=t_ev, rid=st.rid,
+                           slot=st.slot, serial=self._serials.get(st.rid),
+                           block=blk_idx, offset=int(offs[i]),
+                           n_tokens=sizes[i], dur=dur)
         for i, st in enumerate(states):
             prompt = st.request.prompt
             st.prefilled = min(st.prefilled + self.chunk, len(prompt))
@@ -433,21 +548,34 @@ class ContinuousBatchingEngine:
                                           jnp.int32(self.serial[st.slot])))
             self.dispatches += 1
             self.host_syncs += 1
-            self._emit(st, tok0, time.perf_counter() - self._t0)
+            t_tok0 = time.perf_counter() - self._t0
+            if self._sink is not None:
+                self._sink("first_token", t=t_tok0, rid=st.rid,
+                           slot=st.slot, serial=int(self.serial[st.slot]),
+                           token=tok0)
+            self._emit(st, tok0, t_tok0)
 
     def _emit(self, state: RequestState, token: int, now: float) -> None:
-        # ``now`` is stamped after the sync that produced the token blocked
-        # on device work; within a decode block every token shares the
-        # block's completion stamp (block-granularity timestamps)
+        # ``now``: the token's attributed timestamp — exact for prefill
+        # first tokens (stamped at their sync) and single-tick blocks,
+        # evenly subdivided across a multi-tick block's wall span otherwise
+        if state.token_times:
+            self.hist_itl.add(max(0.0, now - state.token_times[-1]))
         state.tokens.append(token)
         state.token_times.append(now)
         if state.t_first is None:
             state.t_first = now
+            self.hist_ttft.add(max(0.0, now - state.t_submit))
         done = (self.eos_id is not None and token == self.eos_id)
         if done or len(state.tokens) >= state.request.max_new_tokens:
             # mirrors decode_multi's on-device retirement exactly: the
             # device flipped this row's active bit at the same tick
             reason = "eos" if done else "max_tokens"
+            if self._sink is not None:
+                self._sink("eos" if done else "budget_retire", t=now,
+                           rid=state.rid, slot=state.slot,
+                           serial=int(self.serial[state.slot]),
+                           n_tokens=len(state.tokens))
             slot = self.sched.retire(state, reason, now)
             self.cache = self._release(self.cache, jnp.int32(slot))
             self.dispatches += 1
@@ -455,11 +583,15 @@ class ContinuousBatchingEngine:
                 # drop the source reference; zero the entry only when this
                 # was the last holder (other slots may still be decoding
                 # against the same source id)
-                freed = self.src_pool.release(self._srcs.pop(state.rid))
+                freed = self.src_pool.release(self._srcs.pop(state.rid),
+                                              owner=state.rid)
                 if freed is not None:
                     self.cache = self._src_release(self.cache,
                                                    jnp.int32(freed))
                     self.dispatches += 1
+            if self._sink is not None:
+                self._sink("release", t=now, rid=state.rid, slot=slot,
+                           serial=int(self.serial[slot]))
             self.active[slot] = False
             self.tok[slot] = self.pad_id
             self.budget[slot] = 0
@@ -482,6 +614,10 @@ class ContinuousBatchingEngine:
         if self.src_pool is not None:
             self.src_pool.reset_stats()
         self._zero_counters()
+        self.hist_ttft.reset()
+        self.hist_itl.reset()
+        if self.tel is not None:
+            self.tel.reset()    # the stream covers this run's traffic only
         waiting = sorted(requests or [], key=lambda r: r.arrival)
         self._t0 = t0 = time.perf_counter()
         while True:
@@ -510,8 +646,12 @@ class ContinuousBatchingEngine:
     def report(self, wall_s: float) -> dict:
         done = self.sched.retired
         gen = sum(len(s.tokens) for s in done)
-        ttfts = sorted(s.ttft for s in done if s.ttft is not None)
-        itls = sorted(x for s in done for x in s.itl_ms)
+
+        def _h(hist, q, scale=1.0):
+            # streaming log-bucket percentile (one-bucket accuracy) — the
+            # fixed-size replacement for the sorted-list nearest-rank _pct
+            p = hist.percentile(q)
+            return None if p is None else round(scale * p, 4)
         # per-slot KV memory accounting: the O(window) win of ring caches
         # (kv_rows_per_slot == ring_len << max_len) is a reported number,
         # not an inference from shapes; recurrent-state families carry no
@@ -537,6 +677,8 @@ class ContinuousBatchingEngine:
             "host_syncs": self.host_syncs,
             "dispatches_per_token": (round(self.dispatches / gen, 4)
                                      if gen else None),
+            "issued_ticks": self.issued_ticks,
+            "parked_ticks": self.parked_ticks,
             "mean_occupancy": round(
                 self.active_row_steps
                 / (self.decode_steps * self.pool.n_slots), 3)
@@ -545,13 +687,16 @@ class ContinuousBatchingEngine:
             "kv_rows_per_slot": (int(self.cache["k"].shape[2])
                                  if "k" in self.cache else 0),
             "max_len": self.pool.max_len,
-            "ttft_p50_s": _pct(ttfts, 0.50),
-            "ttft_p95_s": _pct(ttfts, 0.95),
-            "itl_p50_ms": _pct(itls, 0.50),
-            "itl_p95_ms": _pct(itls, 0.95),
+            "ttft_p50_s": _h(self.hist_ttft, 0.50),
+            "ttft_p95_s": _h(self.hist_ttft, 0.95),
+            "itl_p50_ms": _h(self.hist_itl, 0.50, scale=1e3),
+            "itl_p95_ms": _h(self.hist_itl, 0.95, scale=1e3),
+            "itl_source": ("subdivided" if self.max_ticks > 1 else "exact"),
             "itl_effective_ms": (round(1e3 * wall_s / gen, 4)
                                  if gen else None),
         }
+        if self.tel is not None:
+            agg["telemetry_events"] = len(self.tel.events)
         if self.src_pool is not None:
             # source-KV pool accounting: ingests ran the encoder / cross
             # projections; shares were served by refcount alone (the dedup
@@ -561,11 +706,12 @@ class ContinuousBatchingEngine:
             agg["src_rows_per_entry"] = self.src_pool.src_max
         if self.max_ticks > 1:
             agg["itl_note"] = (
-                "decode_ticks > 1: token timestamps are block-granular, so "
-                "itl percentiles quantize to ~K-token blocks (intra-block "
-                "gaps read as 0, block boundaries as K tokens' worth); "
-                "itl_effective_ms = wall_s / generated_tokens is the honest "
-                "per-token latency figure")
+                "decode_ticks > 1: the host syncs once per K-tick block, so "
+                "per-token timestamps inside a block are attributed by even "
+                "subdivision of the block's wall span (itl_source: "
+                "subdivided) — itl percentiles are per-token estimates, no "
+                "longer K-quantized; itl_effective_ms = wall_s / "
+                "generated_tokens remains the exact denominator")
         return {
             "requests": [{
                 "rid": s.rid, "prompt_len": int(len(s.request.prompt)),

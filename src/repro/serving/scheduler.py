@@ -112,7 +112,13 @@ class RequestState:
 
 
 class Scheduler:
-    def __init__(self, pool: KVSlotPool):
+    """``on_event``: optional telemetry sink (``sink(kind, t=..., **data)``)
+    for the queue-side lifecycle events the scheduler owns — ``enqueue`` /
+    ``reject`` at submit and ``admit`` (plus ``backfill`` when the
+    allocated slot was freed earlier in this run) — so a trace shows
+    queueing delay and slot reuse without the engine re-deriving either."""
+
+    def __init__(self, pool: KVSlotPool, on_event=None):
         self.pool = pool
         self.queue: deque[RequestState] = deque()
         self.prefilling: list[RequestState] = []
@@ -121,6 +127,8 @@ class Scheduler:
         self.rejected: list[RequestState] = []
         self._auto_rid = itertools.count()
         self._rids: set = set()
+        self._sink = on_event
+        self._recycled: set[int] = set()    # slots freed at least once
         self.n_submitted = 0
         self.n_admitted = 0
         self.n_retired = 0
@@ -149,8 +157,13 @@ class Scheduler:
             state.finish_reason = reject
             state.t_done = now
             self.rejected.append(state)
+            if self._sink is not None:
+                self._sink("reject", t=now, rid=state.rid, reason=reject)
             return state
         self.queue.append(state)
+        if self._sink is not None:
+            self._sink("enqueue", t=now, rid=state.rid,
+                       queue_depth=len(self.queue))
         return state
 
     def admit(self, now: float) -> list[RequestState]:
@@ -166,6 +179,12 @@ class Scheduler:
             self.n_admitted += 1
             self.prefilling.append(state)
             newly.append(state)
+            if self._sink is not None:
+                self._sink("admit", t=now, rid=state.rid, slot=state.slot,
+                           queued_s=round(now - state.t_submit, 6))
+                if state.slot in self._recycled:
+                    self._sink("backfill", t=now, rid=state.rid,
+                               slot=state.slot)
         return newly
 
     # ---- transitions ------------------------------------------------------
@@ -189,6 +208,7 @@ class Scheduler:
         state.slot = None
         self.retired.append(state)
         self.n_retired += 1
+        self._recycled.add(slot)
         return slot
 
     def reset_stats(self) -> None:
@@ -198,6 +218,7 @@ class Scheduler:
         cover only real traffic."""
         self.retired.clear()
         self.rejected.clear()
+        self._recycled.clear()   # a post-reset admit is a fresh alloc again
         self._rids = {s.rid for s in self.all_states()}
         self.n_submitted = (len(self.queue) + len(self.prefilling)
                             + len(self.decoding))

@@ -159,9 +159,20 @@ class SourceKVPool:
     request holds at most one reference, so entries in use <= slots in use,
     and sharing only loosens that bound. A smaller pool would need an
     admission gate; a larger one is pure dedup headroom.
+
+    ``on_event``: optional telemetry sink (``sink(kind, **data)``) the
+    ledger calls at its three state changes — ``source_ingest`` (fresh
+    entry acquired; the caller will run the encoder), ``source_share``
+    (acquisition served by refcount on a resident entry) and
+    ``source_release`` (last holder retired; the entry goes back for
+    zeroing) — each carrying the source id, entry index, refcount, and the
+    acquiring/releasing ``owner`` (the request id, when the caller passes
+    one). This makes "which requests shared an encoder entry" a property
+    of the trace itself rather than something inferred from the engine's
+    aggregate ``source_ingests`` / ``source_shares`` counters.
     """
 
-    def __init__(self, n_entries: int, src_max: int):
+    def __init__(self, n_entries: int, src_max: int, on_event=None):
         if n_entries < 1:
             raise SlotPoolError(f"n_entries must be >= 1, got {n_entries}")
         if src_max < 1:
@@ -172,6 +183,7 @@ class SourceKVPool:
         self._entry: dict[Hashable, int] = {}             # source id -> entry
         self._refs: dict[int, int] = {}                   # entry -> refcount
         self._sid: dict[int, Hashable] = {}               # entry -> source id
+        self._sink = on_event               # telemetry sink; None -> silent
         self.total_ingests = 0              # fresh entries (encoder ran)
         self.total_shares = 0               # acquisitions served by sharing
 
@@ -197,15 +209,20 @@ class SourceKVPool:
         return self._refs.get(entry, 0)
 
     # ---- acquire / release ------------------------------------------------
-    def acquire(self, source_id: Hashable) -> tuple[int | None, bool]:
+    def acquire(self, source_id: Hashable,
+                owner: Hashable = None) -> tuple[int | None, bool]:
         """Returns ``(entry, fresh)``: ``fresh=True`` means the caller must
         ingest the source's K/V into the entry's device rows; ``fresh=False``
         means the source is already resident and this request shares it.
-        ``(None, False)`` when the pool is exhausted."""
+        ``(None, False)`` when the pool is exhausted. ``owner`` (typically
+        the request id) rides along on the ledger's telemetry events."""
         entry = self._entry.get(source_id)
         if entry is not None:
             self._refs[entry] += 1
             self.total_shares += 1
+            if self._sink is not None:
+                self._sink("source_share", rid=owner, entry=entry,
+                           source_id=source_id, refcount=self._refs[entry])
             return entry, False
         if not self._free:
             return None, False
@@ -214,9 +231,13 @@ class SourceKVPool:
         self._refs[entry] = 1
         self._sid[entry] = source_id
         self.total_ingests += 1
+        if self._sink is not None:
+            self._sink("source_ingest", rid=owner, entry=entry,
+                       source_id=source_id, refcount=1)
         return entry, True
 
-    def release(self, source_id: Hashable) -> int | None:
+    def release(self, source_id: Hashable,
+                owner: Hashable = None) -> int | None:
         """Drop one reference. Returns the freed entry index when the last
         reference went away — the caller must then zero the entry's device
         rows (``TransformerLM.release_source``) — else None."""
@@ -230,6 +251,10 @@ class SourceKVPool:
         del self._entry[source_id]
         del self._sid[entry]
         self._free.append(entry)
+        if self._sink is not None:
+            # zeroing event: the caller is about to reset the device rows
+            self._sink("source_release", rid=owner, entry=entry,
+                       source_id=source_id, refcount=0)
         return entry
 
     def reset_stats(self) -> None:

