@@ -20,7 +20,13 @@ Checks, per arch entry:
 * ``verify`` — ``verify_mismatched_rids`` must be empty whenever present;
 * ``telemetry overhead`` — when the fresh entry carries a telemetry
   section (``--trace-out`` runs), enabled-vs-disabled throughput must be
-  within 3% and tokens identical.
+  within 3% and tokens identical;
+* ``chaos`` entries (``bench: "serving_chaos"`` from ``--faults`` runs)
+  swap the perf tolerances for the recovery contract: the deterministic
+  counters (errored / shed / generated tokens / faults fired / dispatch
+  retries) pinned exactly against the baseline, the contract booleans
+  (victim-only quarantine, unaffected-stream identity, victim prefix,
+  replay determinism, post-run audit) true, and zero slot/source leaks.
 
 Schema guard: entries are stamped (``schema_version``, config, seed, jax
 version, git describe — see ``serving_bench.py``); a fresh/baseline
@@ -54,8 +60,20 @@ TOLERANCES = {
 TELEMETRY_OVERHEAD_MAX_PCT = 3.0
 
 # trace parameters that must be identical for the numbers to be comparable
-IDENTITY_KEYS = ("arch", "reduced", "n_slots", "n_requests", "max_len",
-                 "chunk", "decode_ticks", "prompt_len", "max_new")
+# (keys absent from both entries — e.g. the chaos / trace-shape knobs on
+# baselines that predate them — compare equal, so old baselines stay valid)
+IDENTITY_KEYS = ("bench", "arch", "reduced", "n_slots", "n_requests",
+                 "max_len", "chunk", "decode_ticks", "prompt_len", "max_new",
+                 "trace_shape", "rate", "fault_seed", "n_faults")
+
+# chaos entries (bench == "serving_chaos"): deterministic recovery counters
+# pinned exactly against the baseline, plus contract booleans that must be
+# true on the fresh run regardless of what the baseline recorded
+CHAOS_EXACT = ("n_errored", "n_shed", "generated_tokens", "faults_fired",
+               "dispatch_retries")
+CHAOS_FLAGS = ("victim_only_quarantine", "unaffected_identical",
+               "victim_prefix_ok", "replay_identical", "audit_clean")
+CHAOS_ZERO = ("slot_leaks", "src_leaks")
 
 
 class SchemaMismatch(Exception):
@@ -109,6 +127,24 @@ def compare_entry(fresh: dict, base: dict) -> list[dict]:
         checks.append({"arch": fresh.get("arch"), "metric": metric,
                        "fresh": f, "baseline": b, "limit": limit,
                        "ok": bool(ok), "note": note})
+
+    if fresh.get("bench") == "serving_chaos":
+        fc, bc = fresh.get("chaos") or {}, base.get("chaos") or {}
+        for metric in CHAOS_EXACT:
+            f, b = fc.get(metric), bc.get(metric)
+            add(metric, f, b, f"== {b}", f is not None and f == b, "exact")
+        for metric in CHAOS_FLAGS:
+            add(metric, fc.get(metric), True, "== True",
+                fc.get(metric) is True, "recovery contract")
+        for metric in CHAOS_ZERO:
+            add(metric, fc.get(metric), 0, "== 0", fc.get(metric) == 0, "")
+        add("audit_checks", fc.get("audit_checks"), None, "> 0",
+            bool(fc.get("audit_checks")), "auditor actually ran")
+        bad = fresh.get("verify_mismatched_rids")
+        if bad is not None:
+            add("verify_mismatched", len(bad), 0, "== 0", len(bad) == 0,
+                str(bad) if bad else "")
+        return checks
 
     for metric, (kind, tol) in TOLERANCES.items():
         f = fresh.get(metric, _deep_get(fresh, f"continuous.{metric}"))

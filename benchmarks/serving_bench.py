@@ -50,9 +50,18 @@ throughput delta is reported (and gated under ``--check``) as the
 telemetry overhead, the token streams are checked identical, and the
 pass's event stream is written as a Chrome/Perfetto trace.
 
+``--faults`` switches to the chaos leg: fault-free run, seeded-FaultPlan
+run, and exact replay on one engine (invariant auditor on), gating
+victim-only quarantine, unaffected-stream byte-identity, deterministic
+replay, and zero slot/source leaks — the recovery contract as a pinned
+regression surface (``bench: "serving_chaos"``).
+
     PYTHONPATH=src python benchmarks/serving_bench.py --reduced
     PYTHONPATH=src python benchmarks/serving_bench.py --reduced --verify \
         --arch rwkv6-3b,hymba-1.5b,olmoe-1b-7b --decode-ticks 8
+    PYTHONPATH=src python benchmarks/serving_bench.py --reduced --check \
+        --verify --faults --trace-shape bursty --rate 200 \
+        --json BENCH_serving_chaos.json
     PYTHONPATH=src python benchmarks/serving_bench.py --reduced --verify \
         --arch whisper_small --json BENCH_serving_xattn.json
     PYTHONPATH=src python benchmarks/serving_bench.py --reduced \
@@ -73,8 +82,10 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models.api import build_model, needs_source
-from repro.serving import (ContinuousBatchingEngine, ServingEngine,
-                           Telemetry, poisson_trace)
+from repro.serving import (ContinuousBatchingEngine, EngineAuditor,
+                           FaultPlan, ServingEngine, Telemetry,
+                           poisson_trace)
+from repro.serving.workload import TRACE_SHAPES
 
 SPEEDUP_TARGET = 1.3
 # BENCH entry schema, stamped into every JSON so check_regression.py can
@@ -235,6 +246,24 @@ def main(argv=None) -> int:
     ap.add_argument("--gen-min", type=int, default=4)
     ap.add_argument("--gen-max", type=int, default=128)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace-shape", default="poisson",
+                    choices=list(TRACE_SHAPES),
+                    help="interarrival shape (bursty / heavy-tail stress "
+                         "the queue; default poisson keeps pre-existing "
+                         "baselines comparable)")
+    ap.add_argument("--rate", type=float, default=None,
+                    help="mean arrival rate req/s (default: backlogged)")
+    ap.add_argument("--faults", action="store_true",
+                    help="chaos mode: run the continuous engine fault-free, "
+                         "then under a seeded FaultPlan, then replay the "
+                         "plan — checks victim-only quarantine, unaffected-"
+                         "stream byte-identity, deterministic replay, and "
+                         "zero slot/source leaks (auditor on throughout). "
+                         "Replaces the lockstep-vs-continuous comparison")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="chaos mode: FaultPlan.random seed")
+    ap.add_argument("--n-faults", type=int, default=3,
+                    help="chaos mode: faults per plan")
     ap.add_argument("--source-min", type=int, default=0,
                     help="cross-attention archs: min source rows per "
                          "request (default: source_len // 4)")
@@ -276,7 +305,8 @@ def main(argv=None) -> int:
             p = Path(args.trace_out)
             trace_out = (p if len(archs) == 1
                          else p.with_name(f"{p.stem}.{arch}{p.suffix}"))
-        result, arch_rc = run_arch(arch, args, trace_out=trace_out)
+        result, arch_rc = (run_chaos(arch, args) if args.faults
+                           else run_arch(arch, args, trace_out=trace_out))
         results.append(result)
         rc = max(rc, arch_rc)
 
@@ -287,8 +317,10 @@ def main(argv=None) -> int:
     return rc
 
 
-def run_arch(arch: str, args, trace_out: Path | None = None
-             ) -> tuple[dict, int]:
+def setup_arch(arch: str, args):
+    """Shared per-arch setup: config, model, params, and the feasible
+    seeded trace (same filters for every bench mode, so a chaos run and a
+    perf run over the same flags replay the identical workload)."""
     cfg = get_config(arch, reduced=args.reduced)
     model = build_model(cfg)
     params = model.init_params(jax.random.PRNGKey(0))
@@ -307,6 +339,7 @@ def run_arch(arch: str, args, trace_out: Path | None = None
                       source_share=args.source_share)
     trace = poisson_trace(
         n_requests=args.requests, vocab_size=cfg.vocab_size,
+        rate=args.rate, shape=args.trace_shape,
         prompt_len=(args.prompt_min, args.prompt_max),
         max_new=(args.gen_min, args.gen_max), seed=args.seed, **src_kw)
     # both engines must see the identical feasible workload: a request the
@@ -321,7 +354,37 @@ def run_arch(arch: str, args, trace_out: Path | None = None
     if len(feasible) < len(trace):
         print(f"  [note] dropped {len(trace) - len(feasible)} requests "
               f"exceeding max_len {args.max_len} budget")
-    trace = feasible
+    return cfg, model, params, feasible, src_range
+
+
+def _entry_stamp(cfg, args, trace, src_range) -> dict:
+    """The identity keys check_regression.py compares fresh vs baseline on.
+    ``trace_shape`` / ``rate`` appear only when non-default so pre-existing
+    baselines (generated before the knobs existed) stay comparable."""
+    return {
+        "schema_version": SCHEMA_VERSION,
+        "meta": {
+            "seed": args.seed, "arch_list": args.arch,
+            "config": cfg.name, "jax_version": jax.__version__,
+            "git_describe": _git_describe(),
+        },
+        "arch": cfg.name, "reduced": args.reduced,
+        "n_slots": args.n_slots, "n_requests": len(trace),
+        "max_len": args.max_len, "chunk": args.chunk,
+        "decode_ticks": args.decode_ticks,
+        "prompt_len": [args.prompt_min, args.prompt_max],
+        "max_new": [args.gen_min, args.gen_max],
+        **({"trace_shape": args.trace_shape}
+           if args.trace_shape != "poisson" else {}),
+        **({"rate": args.rate} if args.rate is not None else {}),
+        **({"source_len": list(src_range),
+            "source_share": args.source_share} if src_range else {}),
+    }
+
+
+def run_arch(arch: str, args, trace_out: Path | None = None
+             ) -> tuple[dict, int]:
+    cfg, model, params, trace, src_range = setup_arch(arch, args)
 
     print(f"[serving_bench] {cfg.name} reduced={args.reduced} "
           f"slots={args.n_slots} requests={len(trace)}")
@@ -418,20 +481,7 @@ def run_arch(arch: str, args, trace_out: Path | None = None
             rc = 1
     result = {
         "bench": "serving_continuous_vs_lockstep",
-        "schema_version": SCHEMA_VERSION,
-        "meta": {
-            "seed": args.seed, "arch_list": args.arch,
-            "config": cfg.name, "jax_version": jax.__version__,
-            "git_describe": _git_describe(),
-        },
-        "arch": cfg.name, "reduced": args.reduced,
-        "n_slots": args.n_slots, "n_requests": len(trace),
-        "max_len": args.max_len, "chunk": args.chunk,
-        "decode_ticks": args.decode_ticks,
-        "prompt_len": [args.prompt_min, args.prompt_max],
-        "max_new": [args.gen_min, args.gen_max],
-        **({"source_len": list(src_range),
-            "source_share": args.source_share} if src_range else {}),
+        **_entry_stamp(cfg, args, trace, src_range),
         "lockstep": lock, "continuous": cont,
         "speedup_tokens_per_s": speedup,
         "speedup_target": SPEEDUP_TARGET,
@@ -444,6 +494,123 @@ def run_arch(arch: str, args, trace_out: Path | None = None
         result["verify_mismatched_rids"] = bad
         print(f"  verify: {len(trace) - len(bad)}/{len(trace)} requests "
               f"token-for-token equal to per-request generation "
+              f"[{'PASS' if not bad else 'FAIL: ' + str(bad)}]")
+        rc = max(rc, 1 if bad else 0)
+    return result, rc
+
+
+def run_chaos(arch: str, args) -> tuple[dict, int]:
+    """Chaos leg (``--faults``): one continuous engine with the invariant
+    auditor on, three runs over the identical trace — fault-free, under a
+    seeded :class:`FaultPlan`, and a replay of the same plan — then the
+    recovery contract, checked not asserted:
+
+    * only the plan's fired victims end ERRORED (victim-only quarantine);
+    * every non-victim token stream is byte-identical to the fault-free
+      run, and each victim's partial stream is a prefix of its fault-free
+      stream;
+    * the replay run reproduces the faulted run exactly (tokens + errored
+      set) — fault handling is deterministic, so failures are debuggable;
+    * zero slot / source-entry leaks after the faulted run, and a full
+      post-run auditor check passes.
+
+    All gates are deterministic for a given (seed, fault-seed) pair, so
+    ``check_regression.py`` pins them exactly against the checked-in
+    ``BENCH_serving_chaos.json`` baseline."""
+    cfg, model, params, trace, src_range = setup_arch(arch, args)
+    print(f"[serving_bench --faults] {cfg.name} reduced={args.reduced} "
+          f"slots={args.n_slots} requests={len(trace)} "
+          f"shape={args.trace_shape}")
+    auditor = EngineAuditor()
+    eng = ContinuousBatchingEngine(
+        model, params, n_slots=args.n_slots, max_len=args.max_len,
+        chunk=args.chunk, seed=args.seed, decode_ticks=args.decode_ticks,
+        auditor=auditor)
+    eng.warmup()
+    clean = eng.run(list(trace))
+
+    kinds = ("poison_nan", "dispatch_fail", "tick_delay")
+    if needs_source(cfg):
+        kinds += ("ingest_fail",)
+    # max_block=0: every fault fires at its seam's first opportunity —
+    # poison at the victim's first decode block — so the fired set is
+    # request-relative and stays deterministic under timed bursty arrivals
+    plan = FaultPlan.random(args.fault_seed, [r.rid for r in trace],
+                            n_faults=args.n_faults, kinds=kinds, max_block=0)
+    eng.faults = plan
+    faulted = eng.run(list(trace))
+    eng.faults = plan.replay()
+    replayed = eng.run(list(trace))
+    eng.faults = None
+
+    def toks(report):
+        return {r["rid"]: r["tokens"] for r in report["requests"]}
+
+    def errored(report):
+        return sorted(r["rid"] for r in report["requests"]
+                      if r["status"] == "errored")
+
+    ct, ft, rt = toks(clean), toks(faulted), toks(replayed)
+    victims = sorted(plan.victims())
+    err = errored(faulted)
+    victim_only = err == victims
+    unaffected = all(ft[rid] == t for rid, t in ct.items()
+                     if rid not in victims)
+    prefix_ok = all(ft[rid] == ct[rid][:len(ft[rid])] for rid in victims)
+    replay_identical = (ft == rt and err == errored(replayed))
+    slot_leaks = eng.pool.n_used
+    src_leaks = eng.src_pool.n_used if eng.src_pool is not None else 0
+    try:
+        auditor.check(eng)
+        audit_clean = True
+    except AssertionError as e:
+        audit_clean = False
+        print(f"  [audit] post-run violation: {e}")
+
+    agg = faulted["aggregate"]
+    chaos = {
+        "plan": plan.to_json(),
+        "victims": victims, "errored": err,
+        "n_errored": agg["n_errored"], "n_shed": agg["n_shed"],
+        "generated_tokens": agg["generated_tokens"],
+        "faults_fired": agg["faults_fired"],
+        "dispatch_retries": agg.get("dispatch_retries", 0),
+        "audit_checks": agg["audit_checks"],
+        "victim_only_quarantine": victim_only,
+        "unaffected_identical": unaffected,
+        "victim_prefix_ok": prefix_ok,
+        "replay_identical": replay_identical,
+        "slot_leaks": slot_leaks, "src_leaks": src_leaks,
+        "audit_clean": audit_clean,
+    }
+    ok = (victim_only and unaffected and prefix_ok and replay_identical
+          and slot_leaks == 0 and src_leaks == 0 and audit_clean
+          and agg["audit_checks"] > 0)
+    print(f"  plan: {plan!r} -> victims {victims}, errored {err} "
+          f"[{'OK' if victim_only else 'FAIL'}]")
+    print(f"  recovery: unaffected identical {unaffected}, victim prefix "
+          f"{prefix_ok}, replay identical {replay_identical}")
+    print(f"  ledger: {slot_leaks} slot leaks, {src_leaks} source leaks, "
+          f"{agg['audit_checks']} audit checks, clean {audit_clean}")
+    print(f"  tokens: {agg['generated_tokens']} retired "
+          f"({agg['n_errored']} errored, {agg['n_shed']} shed, "
+          f"{chaos['dispatch_retries']} dispatch retries) "
+          f"[{'PASS' if ok else 'FAIL'}]")
+
+    rc = 0 if (ok or not args.check) else 1
+    result = {
+        "bench": "serving_chaos",
+        **_entry_stamp(cfg, args, trace, src_range),
+        "fault_seed": args.fault_seed, "n_faults": args.n_faults,
+        "clean": clean["aggregate"], "faulted": agg,
+        "chaos": chaos,
+    }
+    if args.verify:
+        bad = verify_equivalence(model, params, trace, clean,
+                                 max_len=args.max_len)
+        result["verify_mismatched_rids"] = bad
+        print(f"  verify: {len(trace) - len(bad)}/{len(trace)} fault-free "
+              f"requests token-for-token equal to per-request generation "
               f"[{'PASS' if not bad else 'FAIL: ' + str(bad)}]")
         rc = max(rc, 1 if bad else 0)
     return result, rc

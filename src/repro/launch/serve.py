@@ -38,8 +38,11 @@ import jax.numpy as jnp
 from repro.configs import get_config
 from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.models.api import build_model, needs_source
-from repro.serving import (ContinuousBatchingEngine, ServingEngine,
-                           Telemetry, load_trace, poisson_trace)
+from repro.serving import (ContinuousBatchingEngine, EngineAuditor,
+                           OverloadConfig, ServingEngine, Telemetry,
+                           load_trace, poisson_trace)
+from repro.serving.scheduler import SHED_POLICIES
+from repro.serving.workload import TRACE_SHAPES
 
 log = logging.getLogger("repro.launch.serve")
 
@@ -75,10 +78,28 @@ def main(argv=None):
                          "K, the adaptive horizon drops to 1 while prefill "
                          "chunks are waiting")
     ap.add_argument("--rate", type=float, default=None,
-                    help="continuous: Poisson arrival rate req/s "
+                    help="continuous: mean arrival rate req/s "
                          "(default: backlogged)")
+    ap.add_argument("--trace-shape", default="poisson",
+                    choices=list(TRACE_SHAPES),
+                    help="continuous: interarrival shape — poisson "
+                         "(well-behaved), bursty (near-simultaneous "
+                         "clumps), heavy-tail (Lomax gaps); overload "
+                         "control is exercised by the latter two")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="continuous: bound the admission queue "
+                         "(overload control; default unbounded)")
+    ap.add_argument("--shed-policy", default="reject",
+                    choices=list(SHED_POLICIES),
+                    help="continuous: what a full queue does — reject the "
+                         "incoming request, shed the oldest queued one, or "
+                         "degrade everyone's decode budget")
+    ap.add_argument("--audit", action="store_true",
+                    help="continuous: run the engine invariant auditor "
+                         "after every decode block")
     ap.add_argument("--trace", default=None,
-                    help="continuous: JSON trace file instead of Poisson")
+                    help="continuous: JSON trace file instead of generated "
+                         "arrivals")
     ap.add_argument("--eos-id", type=int, default=None)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--trace-out", default=None,
@@ -160,18 +181,33 @@ def _run_continuous(args, cfg, model, params, mesh):
             n_requests=args.requests, vocab_size=cfg.vocab_size,
             rate=args.rate, prompt_len=(min(8, args.prompt_len),
                                         args.prompt_len),
-            max_new=(min(4, args.gen), args.gen), seed=args.seed, **src_kw)
+            max_new=(min(4, args.gen), args.gen), seed=args.seed,
+            shape=args.trace_shape, **src_kw)
 
     telemetry = (Telemetry(jsonl_path=args.events_out)
                  if (args.trace_out or args.events_out) else None)
+    overload = (OverloadConfig(max_queue=args.max_queue,
+                               policy=args.shed_policy)
+                if args.max_queue else None)
     with mesh:
         eng = ContinuousBatchingEngine(
             model, params, n_slots=n_slots, max_len=max_len,
             chunk=args.chunk, eos_id=args.eos_id,
             temperature=args.temperature, seed=args.seed,
-            decode_ticks=args.decode_ticks, telemetry=telemetry)
+            decode_ticks=args.decode_ticks, telemetry=telemetry,
+            overload=overload,
+            auditor=EngineAuditor() if args.audit else None)
         eng.warmup()
+        # a Ctrl-C lands inside run(), which drains gracefully: the
+        # in-flight block finishes, queued requests shed with a typed
+        # code, conservation still holds, and the report comes back with
+        # interrupted: true — so the telemetry/trace sinks below always
+        # flush instead of losing the JSONL tail
         report = eng.run(trace)
+        if report["aggregate"].get("interrupted"):
+            log.warning("run interrupted: %d shed, %d retired with partial "
+                        "tokens", report["aggregate"]["n_shed"],
+                        report["aggregate"]["n_retired"])
     if telemetry is not None:
         if args.trace_out:
             path = telemetry.write_chrome_trace(args.trace_out)

@@ -792,7 +792,8 @@ class TransformerLM:
                      active: jax.Array, budget: jax.Array,
                      serials: jax.Array, emitted: jax.Array, n_ticks: int,
                      *, eos_id: int | None = None, temperature: float = 0.0,
-                     rng_key: jax.Array | None = None
+                     rng_key: jax.Array | None = None,
+                     poison: jax.Array | None = None
                      ) -> tuple[jax.Array, jax.Array, jax.Array, Cache]:
         """Fuse ``n_ticks`` ragged decode ticks into one program: a
         ``lax.scan`` over the :meth:`decode_step` body with per-tick
@@ -820,7 +821,19 @@ class TransformerLM:
         Returns ``(tok_block [K, B] int32, active [B], emitted [B], cache)``
         where ``tok_block[t, b]`` is the token row ``b`` emitted at tick
         ``t``, or ``-1`` if the row was inactive — the host replays
-        retirement from the block alone, no per-tick sync."""
+        retirement from the block alone, no per-tick sync.
+
+        **On-device health check**: every tick verifies each active row's
+        logits are finite before trusting the sampled token. A row whose
+        logits contain NaN/inf emits the sentinel ``-2`` in ``tok_block``
+        and self-retires (its ``active`` bit flips, ``emitted`` does not
+        advance, its KV writes park from the next tick) — the quarantine
+        signal rides the existing ``[K, B]`` sync at zero extra transfers,
+        and with all-finite logits every output is bit-identical to the
+        uncheck'd program. ``poison``: optional [B] bool fault-injection
+        mask (see :mod:`repro.serving.faults`) that overwrites masked rows'
+        logits with NaN each tick, exercising exactly that detection path;
+        ``None`` (the default) compiles no poisoning code."""
         if rng_key is None:
             rng_key = jax.random.PRNGKey(0)
 
@@ -835,13 +848,21 @@ class TransformerLM:
         def tick(carry, _):
             tok, cache, active, emitted = carry
             logits, cache = self.decode_step(params, tok, cache, active)
+            if poison is not None:
+                logits = jnp.where(poison[:, None], jnp.nan, logits)
+            finite = jnp.all(jnp.isfinite(logits), axis=-1)
             pick = pick_tokens(logits, emitted)
-            emitted = jnp.where(active, emitted + 1, emitted)
+            ok = active & finite
+            emitted = jnp.where(ok, emitted + 1, emitted)
             done = emitted >= budget
             if eos_id is not None:
                 done |= pick == eos_id
-            out = jnp.where(active, pick, jnp.int32(-1))
-            active = active & ~done
+            # healthy rows report their token; a non-finite row reports the
+            # -2 quarantine sentinel; inactive rows stay -1
+            out = jnp.where(active,
+                            jnp.where(finite, pick, jnp.int32(-2)),
+                            jnp.int32(-1))
+            active = ok & ~done
             # a retired row's final token is emitted but never fed back —
             # exactly the single-tick engine's contract
             tok = jnp.where(active, pick, tok)

@@ -1,13 +1,16 @@
 from .engine import ServingEngine
 from .slot_pool import KVSlotPool, SlotPoolError, SourceKVPool
-from .scheduler import Request, RequestState, Scheduler
+from .scheduler import (OverloadConfig, Request, RequestState, Scheduler)
 from .telemetry import Event, LogHistogram, Telemetry, load_events_jsonl
 from .trace import chrome_trace, write_chrome_trace
+from .faults import Fault, FaultInjected, FaultPlan
+from .audit import AuditViolation, EngineAuditor
 from .continuous import ContinuousBatchingEngine
 from .workload import load_trace, poisson_trace
 
 __all__ = ["ServingEngine", "ContinuousBatchingEngine", "KVSlotPool",
-           "SlotPoolError", "SourceKVPool", "Request", "RequestState",
-           "Scheduler", "Event", "LogHistogram", "Telemetry",
-           "load_events_jsonl", "chrome_trace", "write_chrome_trace",
-           "load_trace", "poisson_trace"]
+           "SlotPoolError", "SourceKVPool", "OverloadConfig", "Request",
+           "RequestState", "Scheduler", "Event", "LogHistogram",
+           "Telemetry", "load_events_jsonl", "chrome_trace",
+           "write_chrome_trace", "Fault", "FaultInjected", "FaultPlan",
+           "AuditViolation", "EngineAuditor", "load_trace", "poisson_trace"]

@@ -109,7 +109,10 @@ import numpy as np
 
 from repro.models.transformer import seeded_gumbel_pick
 
-from .scheduler import Request, RequestState, Scheduler
+from .audit import EngineAuditor
+from .faults import FaultInjected, FaultPlan
+from .scheduler import (OverloadConfig, Request, RequestState, Scheduler,
+                        DECODING, PREFILLING, QUEUED)
 from .slot_pool import KVSlotPool, SourceKVPool
 from .telemetry import LogHistogram, Telemetry
 
@@ -133,7 +136,10 @@ class ContinuousBatchingEngine:
                  chunk: int = 16, eos_id: int | None = None,
                  pad_id: int = 0, temperature: float = 0.0, seed: int = 0,
                  decode_ticks: int = 1, source_len: int | None = None,
-                 telemetry: Telemetry | None = None):
+                 telemetry: Telemetry | None = None,
+                 overload: OverloadConfig | None = None,
+                 faults: FaultPlan | None = None,
+                 auditor: EngineAuditor | None = None):
         if not getattr(model, "supports_ragged_serving", lambda: False)():
             raise ValueError(
                 f"{model.cfg.name}: model does not claim ragged serving "
@@ -161,7 +167,24 @@ class ContinuousBatchingEngine:
                              if t is None else t), **data)
             self._sink = _sink
         self.pool = KVSlotPool(n_slots, max_len)
-        self.sched = Scheduler(self.pool, on_event=self._sink)
+        self.sched = Scheduler(self.pool, on_event=self._sink,
+                               overload=overload)
+        # robustness knobs — all default-off; every consult site below is a
+        # single falsy/None check, so the disabled engine runs the exact
+        # pre-robustness host loop (same contract as telemetry)
+        self.faults = faults          # FaultPlan | None; settable post-warmup
+        self.auditor = auditor        # EngineAuditor | None
+        self._draining = False
+        self._interrupted = False
+        self._cancels: set = set()
+        self._n_deadlined = 0         # submitted requests carrying an SLO
+        self._shed_seen = 0           # sched.shed prefix whose serials are
+                                      # already reclaimed
+        self.dispatch_retries = 0
+        # service-time EWMAs for the submit-time predicted-TTFT gate:
+        # per-prefill-chunk dispatch wall and per-request slot-hold time
+        self._chunk_s = 0.0
+        self._svc_s = 0.0
         self._prefill_batched = jax.jit(model.prefill_chunks_batched,
                                         donate_argnums=(2,))
         self._finalize = jax.jit(model.finalize_slot, donate_argnums=(0,))
@@ -192,7 +215,7 @@ class ContinuousBatchingEngine:
         # on how the scheduler interleaved prefill chunks with decode
         # blocks, or on the tick horizon K
         self._base_key = jax.random.PRNGKey(seed)
-        self._decode_fns: dict[int, object] = {}   # tick horizon K -> jit
+        self._decode_fns: dict = {}     # (tick horizon K, poisoned) -> jit
 
         def _prefill_pick(logits_row, serial):
             # first token off a finalized prefill: [V] -> scalar int32.
@@ -272,11 +295,22 @@ class ContinuousBatchingEngine:
 
     # ---- intake -----------------------------------------------------------
     def submit(self, request: Request, now: float = 0.0) -> RequestState:
-        reject = None
-        if self.needs_source:
+        """Typed submit-time validation: every constraint the trace can
+        violate terminates as a structured rejection (``code`` +
+        ``finish_reason``) at submit, never an assert mid-trace. Overload
+        decisions (drain in progress, bounded queue, unattainable TTFT
+        deadline) terminate as ``shed`` instead — the request was feasible,
+        the engine chose to drop it."""
+        reject = shed = None
+        if len(request.prompt) > self.pool.capacity:
+            reject = ("prompt_too_long",
+                      f"rejected: prompt of {len(request.prompt)} tokens > "
+                      f"slot capacity {self.pool.capacity}")
+        elif self.needs_source:
             if (request.source is not None
                     and len(request.source) > self.src_max):
-                reject = (f"rejected: source of {len(request.source)} rows "
+                reject = ("source_too_long",
+                          f"rejected: source of {len(request.source)} rows "
                           f"> source-KV pool rows {self.src_max}")
             elif request.source is None and request.source_id is not None:
                 # a shared id must be ingestable by whichever holder
@@ -284,17 +318,187 @@ class ContinuousBatchingEngine:
                 # entry (src_len 0) for every later sharer, so it is a
                 # contract violation, rejected here rather than silently
                 # decoding sourceless
-                reject = ("rejected: source_id "
+                reject = ("source_id_without_source",
+                          "rejected: source_id "
                           f"{request.source_id!r} without source features "
                           "(a shared entry must be ingestable by its "
                           "first holder)")
-        state = self.sched.submit(request, now, reject=reject)
-        if state.status != "rejected":
+        if reject is None:
+            if self._draining:
+                shed = ("drain", "shed: engine is draining")
+            elif (request.ttft_deadline_s is not None
+                  and self.sched.overload is not None):
+                est = self._predict_ttft(request)
+                if est is not None and est > request.ttft_deadline_s:
+                    shed = ("ttft_unattainable",
+                            f"shed: predicted TTFT {est:.4f}s > deadline "
+                            f"{request.ttft_deadline_s:.4f}s")
+        state = self.sched.submit(request, now, reject=reject, shed=shed)
+        if state.status == QUEUED:
             # admission order is FIFO over submission order, so the serial
             # is a deterministic property of the trace
             self._serials[state.rid] = self._serial_ctr
             self._serial_ctr += 1
+            if (request.ttft_deadline_s is not None
+                    or request.deadline_s is not None):
+                self._n_deadlined += 1
+        self._sync_shed_serials()
         return state
+
+    def _sync_shed_serials(self) -> None:
+        """Reclaim sampler serials of requests shed while queued (the
+        bounded queue's shed-oldest policy evicts inside the scheduler, so
+        the engine reconciles against the shed list's new suffix)."""
+        shed = self.sched.shed
+        while self._shed_seen < len(shed):
+            self._serials.pop(shed[self._shed_seen].rid, None)
+            self._shed_seen += 1
+
+    def _predict_ttft(self, request: Request) -> float | None:
+        """EWMA-based TTFT estimate for an arriving request: queue wait
+        (queued-ahead waves times the per-request slot-hold EWMA, plus one
+        wave when no slot is free) plus its own chunked prefill (chunks
+        times the per-chunk-dispatch EWMA). ``None`` until the engine has
+        served enough traffic to have both EWMAs — the gate never sheds on
+        a cold engine."""
+        if self._chunk_s == 0.0 or self._svc_s == 0.0:
+            return None
+        waves = len(self.sched.queue) / self.pool.n_slots
+        if self.pool.n_free == 0:
+            waves += 1.0
+        chunks = math.ceil(len(request.prompt) / self.chunk)
+        return waves * self._svc_s + chunks * self._chunk_s
+
+    # ---- overload / lifecycle control --------------------------------------
+    def cancel(self, rid) -> None:
+        """Client cancellation: applied at the next step boundary — a
+        queued request sheds (``cancelled``), an in-flight one retires with
+        its partial tokens (``finish_reason`` / ``code`` ``cancelled``) and
+        its slot + source reference reclaimed. Unknown or already-finished
+        rids are dropped silently (cancellation races completion)."""
+        self._cancels.add(rid)
+
+    def drain(self) -> None:
+        """Graceful shutdown: stop admitting (later submits shed with code
+        ``drain``), shed everything still queued at the next step boundary,
+        and let in-flight requests finish naturally. ``run()`` then returns
+        once the last in-flight request retires, flushing telemetry."""
+        self._draining = True
+        if self._sink is not None:
+            self._sink("drain", t=time.perf_counter() - self._t0,
+                       queued=len(self.sched.queue),
+                       in_flight=len(self.sched.prefilling)
+                       + len(self.sched.decoding))
+
+    def _enforce_control(self, now: float) -> None:
+        """Step-boundary control actions: drain sheds the queue,
+        cancellations and expired deadlines shed queued requests / retire
+        in-flight ones with slot + source reclaim. Only runs when one of
+        the three triggers is live (``step`` guards the call), so the
+        default path costs nothing."""
+        if self._draining:
+            for st in list(self.sched.queue):
+                self.sched.shed_queued(st, "drain", now,
+                                       detail="shed: engine draining")
+        if self._cancels:
+            live = {st.rid: st for st in list(self.sched.queue)
+                    + list(self.sched.prefilling)
+                    + list(self.sched.decoding.values())}
+            for rid in list(self._cancels):
+                st = live.get(rid)
+                if st is not None:
+                    if st.status == QUEUED:
+                        self.sched.shed_queued(st, "cancelled", now,
+                                               detail="shed: cancelled by "
+                                                      "client")
+                    else:
+                        self._reclaim(st, "cancelled", now,
+                                      detail="cancelled by client")
+                self._cancels.discard(rid)
+        if self._n_deadlined:
+            for st in list(self.sched.queue):
+                r = st.request
+                missed = ((r.deadline_s is not None
+                           and now - st.t_submit > r.deadline_s)
+                          or (r.ttft_deadline_s is not None
+                              and now - st.t_submit > r.ttft_deadline_s))
+                if missed:
+                    self.sched.shed_queued(
+                        st, "deadline", now,
+                        detail=f"shed: deadline expired after "
+                               f"{now - st.t_submit:.4f}s in queue")
+            for st in (list(self.sched.prefilling)
+                       + list(self.sched.decoding.values())):
+                r = st.request
+                missed = ((r.deadline_s is not None
+                           and now - st.t_submit > r.deadline_s)
+                          or (st.t_first is None
+                              and r.ttft_deadline_s is not None
+                              and now - st.t_submit > r.ttft_deadline_s))
+                if missed:
+                    self._reclaim(st, "deadline", now,
+                                  detail=f"deadline missed after "
+                                         f"{now - st.t_submit:.4f}s")
+        self._sync_shed_serials()
+
+    def _reclaim(self, state: RequestState, code: str, now: float, *,
+                 error: bool = False, detail: str | None = None,
+                 device: bool = True) -> int:
+        """Stop a slot-holding request before its natural end and reclaim
+        everything it owns: the scheduler records the typed terminal state
+        (RETIRED with partial tokens, or ERRORED when ``error``), the slot
+        returns to the free list, its device rows reset, and its source-KV
+        reference dropped (entry zeroed when this was the last holder) —
+        the same reclaim order as normal retirement in ``_emit``.
+        ``device=False`` skips the device dispatches (KeyboardInterrupt
+        unwinding: the cache may hold a donated buffer mid-dispatch, so
+        only host ledgers are cleaned)."""
+        serial = self._serials.get(state.rid)
+        was_prefilling = state.status == PREFILLING
+        slot = self.sched.abort(state, code, now, error=error, detail=detail)
+        if was_prefilling:
+            self._serials.pop(state.rid, None)
+        else:
+            serial = int(self.serial[slot])
+        if device:
+            self.cache = self._release(self.cache, jnp.int32(slot))
+            self.dispatches += 1
+        if self.needs_source and state.rid in self._srcs:
+            freed = self.src_pool.release(self._srcs.pop(state.rid),
+                                          owner=state.rid)
+            if freed is not None and device:
+                self.cache = self._src_release(self.cache, jnp.int32(freed))
+                self.dispatches += 1
+        if self._sink is not None:
+            self._sink("error_retire" if error else "abort", t=now,
+                       rid=state.rid, slot=slot, serial=serial, code=code,
+                       n_tokens=len(state.tokens))
+            self._sink("release", t=now, rid=state.rid, slot=slot,
+                       serial=serial)
+        self.active[slot] = False
+        self.tok[slot] = self.pad_id
+        self.budget[slot] = 0
+        self._note_service(state, now)
+        return slot
+
+    def _note_service(self, state: RequestState, now: float) -> None:
+        # slot-hold EWMA feeding the predicted-TTFT gate; host float math
+        # only, so it runs unconditionally
+        if state.t_admit is None:
+            return
+        hold = max(0.0, now - state.t_admit)
+        self._svc_s = (hold if self._svc_s == 0.0
+                       else 0.5 * self._svc_s + 0.5 * hold)
+
+    def _quarantine(self, slot: int, now: float) -> None:
+        """A decode row reported the ``-2`` non-finite-logits sentinel:
+        quarantine exactly that request — typed ERRORED terminal state,
+        slot + source reclaimed — while every other stream proceeds
+        untouched (their rows never read this slot's state)."""
+        state = self.sched.decoding[slot]
+        self._reclaim(state, "nonfinite_logits", now, error=True,
+                      detail="errored: non-finite logits row (quarantined "
+                             "by the on-device finite check)")
 
     def warmup(self) -> "ContinuousBatchingEngine":
         """Compile the chunk / finalize / decode / release programs with a
@@ -312,26 +516,45 @@ class ContinuousBatchingEngine:
         m = max(2, min(m_want, self.pool.capacity - p))
         src = (np.zeros((self.src_max, self.model.cfg.d_model), np.float32)
                if self.needs_source else None)   # compiles ingest/assign too
-        self.run([Request(prompt=np.zeros(p, np.int32), max_new_tokens=m,
-                          rid="__warmup__", source=src)])
+        # the fault plan must not burn its faults on warmup traffic
+        faults, self.faults = self.faults, None
+        try:
+            self.run([Request(prompt=np.zeros(p, np.int32), max_new_tokens=m,
+                              rid="__warmup__", source=src)])
+        finally:
+            self.faults = faults
         return self
 
     # ---- decode program per tick horizon ----------------------------------
-    def _decode_fn(self, k: int):
+    def _decode_fn(self, k: int, poisoned: bool = False):
         """jit'd K-tick block. At most log2(max_ticks)+1 of these ever
-        compile (the horizon is floored to a power of two)."""
-        fn = self._decode_fns.get(k)
+        compile (the horizon is floored to a power of two). ``poisoned``
+        compiles the fault-injection variant taking a [n_slots] bool mask
+        whose rows get NaN logits each tick — a separate cache key, so
+        fault-free runs never pay for the extra argument."""
+        fn = self._decode_fns.get((k, poisoned))
         if fn is None:
             model, eos, temp = self.model, self.eos_id, self.temperature
             key = self._base_key
 
-            def block(params, tok, cache, active, budget, serials, emitted):
-                toks, _, _, cache = model.decode_multi(
-                    params, tok, cache, active, budget, serials, emitted, k,
-                    eos_id=eos, temperature=temp, rng_key=key)
-                return toks, cache
+            if poisoned:
+                def block(params, tok, cache, active, budget, serials,
+                          emitted, poison):
+                    toks, _, _, cache = model.decode_multi(
+                        params, tok, cache, active, budget, serials,
+                        emitted, k, eos_id=eos, temperature=temp,
+                        rng_key=key, poison=poison)
+                    return toks, cache
+            else:
+                def block(params, tok, cache, active, budget, serials,
+                          emitted):
+                    toks, _, _, cache = model.decode_multi(
+                        params, tok, cache, active, budget, serials,
+                        emitted, k, eos_id=eos, temperature=temp,
+                        rng_key=key)
+                    return toks, cache
             fn = jax.jit(block, donate_argnums=(2,))
-            self._decode_fns[k] = fn
+            self._decode_fns[(k, poisoned)] = fn
         return fn
 
     def _tick_horizon(self, now: float | None = None,
@@ -361,6 +584,15 @@ class ContinuousBatchingEngine:
         k = max(1, min(self.max_ticks, rem))
         if (deadline is not None and now is not None and self._tick_s > 0):
             k = max(1, min(k, int((deadline - now) / self._tick_s)))
+        if self._n_deadlined and now is not None and self._tick_s > 0:
+            # an in-flight total deadline also caps the horizon: the block
+            # should end near the deadline so enforcement (step-boundary)
+            # doesn't overshoot by up to K-1 ticks of dead work
+            for st in self.sched.decoding.values():
+                d = st.request.deadline_s
+                if d is not None:
+                    left = st.t_submit + d - now
+                    k = max(1, min(k, max(1, int(left / self._tick_s))))
         return 1 << (k.bit_length() - 1)
 
     # ---- one engine step --------------------------------------------------
@@ -371,6 +603,8 @@ class ContinuousBatchingEngine:
         arrival while a slot is free (caps the horizon — see
         ``_tick_horizon``). Returns False when nothing was left to do."""
         now = (time.perf_counter() - self._t0) if now is None else now
+        if self._draining or self._cancels or self._n_deadlined:
+            self._enforce_control(now)
         newly = self.sched.admit(now)
         if self.needs_source:
             # source ingest happens AT admission, before the request's
@@ -378,6 +612,17 @@ class ContinuousBatchingEngine:
             # entry resident (whisper-style decoders cross-attend in
             # every layer from chunk 0)
             for st in newly:
+                if (self.faults is not None
+                        and self.faults.take_ingest(st.rid) is not None):
+                    # injected ingest failure: quarantine before any device
+                    # write — the slot returns to the free list this step
+                    if self._sink is not None:
+                        self._sink("fault", t=now, rid=st.rid,
+                                   fault="ingest_fail")
+                    self._reclaim(st, "source_ingest_failed", now,
+                                  error=True,
+                                  detail="errored: source-KV ingest failed")
+                    continue
                 self._acquire_source(st)
 
         if self.sched.prefilling:
@@ -389,11 +634,52 @@ class ContinuousBatchingEngine:
         k = self._tick_horizon(now, deadline)
         live_slots = np.flatnonzero(self.active)     # rows at dispatch time
         blk_idx = self.decode_dispatches
+        poison = None
+        if self.faults is not None:
+            d = self.faults.take("tick_delay", block=blk_idx)
+            if d is not None:
+                if self._sink is not None:
+                    self._sink("fault", t=time.perf_counter() - self._t0,
+                               block=blk_idx, fault="tick_delay",
+                               delay_s=d.delay_s)
+                time.sleep(d.delay_s)
+            while True:
+                try:
+                    # fires BEFORE the jit call: the donated cache was
+                    # never consumed, so re-dispatching is safe
+                    self.faults.raise_if("dispatch_fail", block=blk_idx)
+                    break
+                except FaultInjected:
+                    self.dispatch_retries += 1
+                    if self._sink is not None:
+                        self._sink("fault",
+                                   t=time.perf_counter() - self._t0,
+                                   block=blk_idx, fault="dispatch_fail",
+                                   retry=self.dispatch_retries)
+            hits = self.faults.take_poison(
+                {st.rid: len(st.tokens)
+                 for st in self.sched.decoding.values()}, blk_idx)
+            if hits:
+                mask = np.zeros((self.pool.n_slots,), bool)
+                for slot, st in self.sched.decoding.items():
+                    if st.rid in hits:
+                        mask[slot] = True
+                poison = jnp.asarray(mask)
+                if self._sink is not None:
+                    self._sink("fault", t=time.perf_counter() - self._t0,
+                               block=blk_idx, fault="poison_nan",
+                               rids=list(hits))
         t_dispatch = time.perf_counter()
-        toks, self.cache = self._decode_fn(k)(
-            self.params, jnp.asarray(self.tok), self.cache,
-            jnp.asarray(self.active), jnp.asarray(self.budget),
-            jnp.asarray(self.serial), jnp.asarray(self.emitted))
+        if poison is None:
+            toks, self.cache = self._decode_fn(k)(
+                self.params, jnp.asarray(self.tok), self.cache,
+                jnp.asarray(self.active), jnp.asarray(self.budget),
+                jnp.asarray(self.serial), jnp.asarray(self.emitted))
+        else:
+            toks, self.cache = self._decode_fn(k, poisoned=True)(
+                self.params, jnp.asarray(self.tok), self.cache,
+                jnp.asarray(self.active), jnp.asarray(self.budget),
+                jnp.asarray(self.serial), jnp.asarray(self.emitted), poison)
         self.decode_dispatches += 1
         self.dispatches += 1
         rows = np.asarray(toks)                  # [K, n_slots]; the ONE sync
@@ -408,22 +694,29 @@ class ContinuousBatchingEngine:
         self._tick_s = (per_tick if self._tick_s == 0.0
                         else 0.5 * self._tick_s + 0.5 * per_tick)
         emitted_blk = 0
+        quarantined = []
         for t in range(k):
             live = rows[t] >= 0                  # -1 marks parked rows
-            if not live.any():
+            bad = rows[t] == -2                  # quarantine sentinel: the
+            if not live.any() and not bad.any():  # row's logits went NaN/inf
                 break                            # all rows retired mid-block
-            self.decode_steps += 1
-            self.active_row_steps += int(live.sum())
-            emitted_blk += int(live.sum())
             stamp = blk_start + (t + 1) * per_tick   # == now_blk at t == k-1
-            for slot in np.flatnonzero(live):
-                state = self.sched.decoding[int(slot)]
-                self.pool.advance(int(slot))
-                self._emit(state, int(rows[t, slot]), stamp)
+            if live.any():
+                self.decode_steps += 1
+                self.active_row_steps += int(live.sum())
+                emitted_blk += int(live.sum())
+                for slot in np.flatnonzero(live):
+                    state = self.sched.decoding[int(slot)]
+                    self.pool.advance(int(slot))
+                    self._emit(state, int(rows[t, slot]), stamp)
+            for slot in np.flatnonzero(bad):
+                quarantined.append(int(slot))
+                self._quarantine(int(slot), stamp)
         issued = k * len(live_slots)
         self.issued_ticks += issued
         self.parked_ticks += issued - emitted_blk
         if self._sink is not None:
+            extra = {"quarantined": quarantined} if quarantined else {}
             self._sink(
                 "decode_block", t=now_blk, block=blk_idx, k=k,
                 dur=round(span, 6), emitted=emitted_blk,
@@ -431,8 +724,10 @@ class ContinuousBatchingEngine:
                 slots=[int(s) for s in live_slots],
                 serials=[int(self.serial[s]) for s in live_slots],
                 tokens_per_slot=[int((rows[:k, s] >= 0).sum())
-                                 for s in live_slots])
+                                 for s in live_slots], **extra)
             self._sample_gauges(now_blk, blk_idx, k, issued - emitted_blk)
+        if self.auditor is not None:
+            self.auditor.maybe_check(self)
         return True
 
     def _sample_gauges(self, t: float, block: int, k: int,
@@ -549,6 +844,13 @@ class ContinuousBatchingEngine:
             self.dispatches += 1
             self.host_syncs += 1
             t_tok0 = time.perf_counter() - self._t0
+            # admit -> first-token wall per chunk (includes the decode
+            # blocks interleaved between chunks — the realistic under-load
+            # cost the predicted-TTFT gate needs); host float math only
+            per_chunk = (max(0.0, t_tok0 - st.t_admit)
+                         / max(1, math.ceil(len(prompt) / self.chunk)))
+            self._chunk_s = (per_chunk if self._chunk_s == 0.0
+                             else 0.5 * self._chunk_s + 0.5 * per_chunk)
             if self._sink is not None:
                 self._sink("first_token", t=t_tok0, rid=st.rid,
                            slot=st.slot, serial=int(self.serial[st.slot]),
@@ -595,6 +897,7 @@ class ContinuousBatchingEngine:
             self.active[slot] = False
             self.tok[slot] = self.pad_id
             self.budget[slot] = 0
+            self._note_service(state, now)
         else:
             self.active[state.slot] = True
             self.tok[state.slot] = token
@@ -606,7 +909,19 @@ class ContinuousBatchingEngine:
         the wall clock passes its ``Request.arrival`` offset (0.0 on every
         request = a fully backlogged throughput run); when the engine is
         idle it sleeps until the next arrival, so TTFT measures from the
-        request's actual submission."""
+        request's actual submission.
+
+        ``drain()`` (from a signal handler or another coroutine) makes the
+        run finish early but cleanly: queued and not-yet-due requests shed
+        with code ``drain``, in-flight ones finish naturally. A
+        ``KeyboardInterrupt`` is the abrupt form: the in-flight block that
+        already dispatched completes (the interrupt is caught at the loop
+        boundary), queued + waiting requests shed, slot-holding requests
+        retire with their partial tokens (code ``interrupt``) via
+        host-only reclaim (the device cache may hold a donated buffer
+        mid-dispatch), telemetry flushes, and the report is returned with
+        ``interrupted: true`` instead of the exception unwinding through a
+        half-consistent engine."""
         # per-run stats: an engine is reusable (warmup, successive traces),
         # so drop finished-traffic history before timing starts
         self.sched.reset_stats()
@@ -616,31 +931,64 @@ class ContinuousBatchingEngine:
         self._zero_counters()
         self.hist_ttft.reset()
         self.hist_itl.reset()
+        self._shed_seen = 0
+        self._draining = False
+        self._interrupted = False
+        self._cancels.clear()
+        self.dispatch_retries = 0
+        if self.auditor is not None:
+            self.auditor.reset()
         if self.tel is not None:
             self.tel.reset()    # the stream covers this run's traffic only
         waiting = sorted(requests or [], key=lambda r: r.arrival)
         self._t0 = t0 = time.perf_counter()
-        while True:
+        try:
+            while True:
+                now = time.perf_counter() - t0
+                if self._draining:
+                    # graceful shutdown: not-yet-due arrivals submit now and
+                    # shed (typed terminal state, nothing silently dropped)
+                    for r in waiting:
+                        self.submit(r, now=now)
+                    waiting = []
+                while waiting and waiting[0].arrival <= now:
+                    self.submit(waiting.pop(0), now=now)
+                # a not-yet-due arrival with a free slot waiting for it caps
+                # the tick horizon (an arrival into a busy pool queues
+                # regardless, so it imposes no deadline)
+                deadline = (waiting[0].arrival
+                            if waiting and self.pool.n_free else None)
+                worked = self.step(now, deadline)
+                if not worked and not waiting:
+                    break
+                if not worked and waiting:
+                    time.sleep(max(0.0, waiting[0].arrival
+                                   - (time.perf_counter() - t0)))
+        except KeyboardInterrupt:
             now = time.perf_counter() - t0
-            while waiting and waiting[0].arrival <= now:
-                self.submit(waiting.pop(0), now=now)
-            # a not-yet-due arrival with a free slot waiting for it caps the
-            # tick horizon (an arrival into a busy pool queues regardless,
-            # so it imposes no deadline)
-            deadline = (waiting[0].arrival
-                        if waiting and self.pool.n_free else None)
-            worked = self.step(now, deadline)
-            if not worked and not waiting:
-                break
-            if not worked and waiting:
-                time.sleep(max(0.0, waiting[0].arrival
-                               - (time.perf_counter() - t0)))
+            self._interrupted = True
+            self._draining = True
+            for r in waiting:           # typed shed, not silent loss
+                self.submit(r, now=now)
+            waiting = []
+            for st in list(self.sched.queue):
+                self.sched.shed_queued(st, "interrupt", now,
+                                       detail="shed: run interrupted")
+            for st in (list(self.sched.prefilling)
+                       + list(self.sched.decoding.values())):
+                # host-only reclaim: the cache may be a donated buffer if
+                # the interrupt landed mid-dispatch
+                self._reclaim(st, "interrupt", now, device=False,
+                              detail="interrupted with partial tokens")
+            self._sync_shed_serials()
         wall = time.perf_counter() - t0
         self.sched.assert_conservation()
         if self.src_pool is not None:
             self.src_pool.assert_consistent()
             assert self.src_pool.n_used <= self.pool.n_used, \
                 "source entries outlive their holders"
+        if self.tel is not None:
+            self.tel.flush()    # no lost JSONL tail on drain / interrupt
         return self.report(wall)
 
     def report(self, wall_s: float) -> dict:
@@ -661,10 +1009,15 @@ class ContinuousBatchingEngine:
                                       "src_k", "src_v")
               if k in self.cache]
         kv_bytes = sum(int(a.size) * a.dtype.itemsize for a in kv)
+        term = (self.sched.retired + self.sched.shed + self.sched.errored)
         agg = {
             "n_requests": self.sched.n_submitted,
             "n_retired": self.sched.n_retired,
             "n_rejected": len(self.sched.rejected),
+            "n_shed": len(self.sched.shed),
+            "n_errored": len(self.sched.errored),
+            "n_deadline_missed": sum(s.code == "deadline" for s in term),
+            "n_cancelled": sum(s.code == "cancelled" for s in term),
             "generated_tokens": gen,
             "wall_s": round(wall_s, 3),
             "tokens_per_s": round(gen / wall_s, 1) if wall_s else None,
@@ -697,6 +1050,18 @@ class ContinuousBatchingEngine:
         }
         if self.tel is not None:
             agg["telemetry_events"] = len(self.tel.events)
+        if self.sched.n_degraded:
+            agg["n_degraded"] = self.sched.n_degraded
+        if self.faults is not None:
+            agg["faults_fired"] = self.faults.n_fired
+            agg["faults_pending"] = self.faults.n_pending
+            agg["dispatch_retries"] = self.dispatch_retries
+        if self.auditor is not None:
+            agg["audit_checks"] = self.auditor.n_checks
+        if self._draining:
+            agg["drained"] = True
+        if self._interrupted:
+            agg["interrupted"] = True
         if self.src_pool is not None:
             # source-KV pool accounting: ingests ran the encoder / cross
             # projections; shares were served by refcount alone (the dedup
@@ -718,6 +1083,8 @@ class ContinuousBatchingEngine:
                 "n_tokens": len(s.tokens), "tokens": list(s.tokens),
                 "ttft_s": None if s.ttft is None else round(s.ttft, 4),
                 "finish_reason": s.finish_reason,
-            } for s in done + self.sched.rejected],
+                "status": s.status, "code": s.code,
+            } for s in (done + self.sched.errored + self.sched.rejected
+                        + self.sched.shed)],
             "aggregate": agg,
         }

@@ -88,6 +88,11 @@ class KVSlotPool:
     def length(self, slot: int) -> int:
         return self._length[slot]
 
+    def used_slots(self) -> dict[int, Hashable]:
+        """Snapshot of ``slot -> owner`` for every allocated slot (the
+        auditor cross-checks this against the scheduler's view)."""
+        return dict(self._owner)
+
     def occupancy(self) -> float:
         return self.n_used / self.n_slots
 
@@ -207,6 +212,12 @@ class SourceKVPool:
 
     def refcount(self, entry: int) -> int:
         return self._refs.get(entry, 0)
+
+    def total_refs(self) -> int:
+        """Live references across all entries — must equal the number of
+        requests currently holding a source (refcount conservation; the
+        auditor checks it against the engine's rid -> source-id ledger)."""
+        return sum(self._refs.values())
 
     # ---- acquire / release ------------------------------------------------
     def acquire(self, source_id: Hashable,

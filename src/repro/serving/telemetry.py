@@ -49,6 +49,17 @@ kind                    emitted when
 ``eos``                 request retired by sampling ``eos_id``
 ``budget_retire``       request retired by exhausting ``max_new_tokens``
 ``release``             slot's device state reset after retirement
+``shed``                overload control dropped a request (queue full,
+                        deadline expired in queue, cancel, drain) — carries
+                        the typed ``code``
+``degrade``             bounded-queue degrade policy shrank a queued
+                        request's ``max_new_tokens``
+``abort``               slot-holding request stopped early (deadline /
+                        cancel / drain / interrupt) with partial tokens
+``error_retire``        slot-holding request quarantined with a typed error
+                        (non-finite logits, failed source ingest)
+``fault``               an injected fault fired (``serving.faults``)
+``drain``               engine entered graceful-shutdown drain mode
 ``gauges``              engine gauges sampled at a decode block's sync
 ======================  =====================================================
 
@@ -70,6 +81,7 @@ LIFECYCLE_KINDS = (
     "source_ingest", "source_share", "source_release",
     "prefill_chunk", "first_token", "decode_block",
     "eos", "budget_retire", "release",
+    "shed", "degrade", "abort", "error_retire", "fault", "drain",
 )
 EVENT_KINDS = frozenset(LIFECYCLE_KINDS) | {"gauges"}
 
@@ -229,6 +241,13 @@ class Telemetry:
             self._fh = None
         if self._jsonl_path is not None and self._jsonl_path.exists():
             self._jsonl_path.write_text("")
+
+    def flush(self) -> None:
+        """Push buffered JSONL lines to disk without closing the sink —
+        called at the end of every engine ``run()`` (including drain and
+        interrupt exits) so the event tail is never lost."""
+        if self._fh is not None:
+            self._fh.flush()
 
     def close(self) -> None:
         if self._fh is not None:

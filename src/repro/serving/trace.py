@@ -10,8 +10,12 @@ Perfetto (https://ui.perfetto.dev) or ``chrome://tracing``:
   slot's lane, so a lane reads as the life of that slot: chunked prefill
   slices, then decode-block slices, punctuated by retire/backfill marks;
 * **a scheduler lane** (tid 0) for pre-slot events — ``enqueue``,
-  ``reject`` — and the source-KV pool ledger events (which are keyed by
-  entry, not slot);
+  ``reject``, and the overload-control marks (``shed``, ``degrade``,
+  ``drain``, slotless ``fault`` injections) — and the source-KV pool
+  ledger events (which are keyed by entry, not slot); slot-bound
+  robustness events (``abort``, ``error_retire``, slot-targeted
+  ``fault``) land on the affected slot's lane, so a quarantine reads in
+  place: the decode-block slice, the fault mark, then ``error_retire``;
 * **counter tracks** for the per-block gauges (queue depth, occupancy,
   free slots, live KV bytes, tick horizon K, parked ticks), rendered by
   Perfetto as stepped line charts above the lanes.

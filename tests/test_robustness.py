@@ -1,0 +1,466 @@
+"""Overload-hardened serving: admission control, deadline enforcement,
+fault injection, and the engine invariant auditor.
+
+Three layers, mirroring the subsystem:
+
+* **scheduler** — bounded-queue shed policies (reject / shed-oldest /
+  degrade), typed rejection codes, and conservation across all five
+  terminal states (host-only, no engine);
+* **engine** — drain, cancellation, deadline enforcement, predicted-TTFT
+  shedding, NaN-poison quarantine (victim-only, byte-identical bystanders),
+  ingest / dispatch / delay faults, and a hypothesis-driven chaos soak over
+  randomized :class:`FaultPlan`\\ s (zero leaks, deterministic replay);
+* **auditor** — clean on a healthy engine, detects injected corruption,
+  and perturbs nothing.
+
+The with-knobs-off identity contract (an engine with no overload config,
+no faults, no auditor runs the exact PR-6 host loop) is pinned by the
+serving-conformance suite and the benchmark regression gate; here we pin
+what the knobs *do*.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs import get_config
+from repro.models.api import build_model
+from repro.serving import (AuditViolation, ContinuousBatchingEngine,
+                           EngineAuditor, Fault, FaultPlan, KVSlotPool,
+                           OverloadConfig, Request, Scheduler, Telemetry,
+                           poisson_trace)
+from repro.serving.workload import _arrivals
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                                    # pragma: no cover
+    from _hypothesis_compat import given, settings, st
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _reqs(n, *, plen=6, budget=5, vocab=64, **kw):
+    rng = np.random.default_rng(7)
+    return [Request(prompt=rng.integers(0, vocab, plen).astype(np.int32),
+                    max_new_tokens=budget, rid=i, **kw) for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# scheduler: overload policies + typed terminals (host-only)
+# ---------------------------------------------------------------------------
+
+def test_overload_config_validation():
+    with pytest.raises(ValueError):
+        OverloadConfig(max_queue=0)
+    with pytest.raises(ValueError):
+        OverloadConfig(max_queue=4, policy="panic")
+    with pytest.raises(ValueError):
+        OverloadConfig(max_queue=4, policy="degrade", degrade_factor=1.5)
+
+
+def test_bounded_queue_reject_sheds_incoming():
+    sched = Scheduler(KVSlotPool(2, max_len=64),
+                      overload=OverloadConfig(max_queue=2, policy="reject"))
+    states = [sched.submit(r) for r in _reqs(5)]
+    assert [s.status for s in states[:2]] == ["queued", "queued"]
+    for s in states[2:]:
+        assert s.status == "shed" and s.code == "queue_full"
+    assert len(sched.queue) == 2 and len(sched.shed) == 3
+    sched.assert_conservation()
+
+
+def test_bounded_queue_shed_oldest_evicts_head():
+    sched = Scheduler(KVSlotPool(2, max_len=64),
+                      overload=OverloadConfig(max_queue=2,
+                                              policy="shed-oldest"))
+    states = [sched.submit(r) for r in _reqs(4)]
+    # newest requests stay queued; the queue head was evicted each time
+    assert [s.rid for s in sched.queue] == [2, 3]
+    assert [s.rid for s in sched.shed] == [0, 1]
+    assert all(s.code == "queue_full" for s in sched.shed)
+    assert states[3].status == "queued"
+    sched.assert_conservation()
+
+
+def test_bounded_queue_degrade_halves_budgets():
+    sched = Scheduler(KVSlotPool(2, max_len=64),
+                      overload=OverloadConfig(max_queue=2, policy="degrade",
+                                              degrade_factor=0.5))
+    for r in _reqs(3, budget=8):
+        sched.submit(r)
+    assert len(sched.queue) == 3           # degrade keeps everyone
+    assert [s.request.max_new_tokens for s in sched.queue] == [4, 4, 4]
+    assert all(s.degraded_from == 8 for s in sched.queue)
+    assert sched.n_degraded == 3
+    # floor at 1: repeated overload can't degrade a budget to zero
+    for r in _reqs(4, budget=8)[3:]:
+        sched.submit(r)
+    assert all(s.request.max_new_tokens >= 1 for s in sched.queue)
+    sched.assert_conservation()
+
+
+def test_typed_rejection_and_terminal_codes():
+    sched = Scheduler(KVSlotPool(2, max_len=16))
+    big = Request(prompt=np.arange(4, dtype=np.int32), max_new_tokens=99,
+                  rid="big")
+    rej = sched.submit(big)
+    assert rej.status == "rejected" and rej.code == "budget_too_large"
+    ok = sched.submit(_reqs(1)[0])
+    (adm,) = sched.admit(0.0)
+    assert adm is ok and adm.slot is not None
+    slot = sched.abort(adm, "nonfinite_logits", 1.0, error=True,
+                       detail="errored: poisoned")
+    assert slot == adm.slot or adm.slot is None
+    assert adm.status == "errored" and adm.code == "nonfinite_logits"
+    assert sched.errored == [adm] and sched.n_retired == 0
+    sched.assert_conservation()
+
+
+def test_request_deadline_validation():
+    with pytest.raises(ValueError):
+        Request(prompt=np.arange(4, dtype=np.int32), max_new_tokens=4,
+                ttft_deadline_s=0.0)
+    with pytest.raises(ValueError):
+        Request(prompt=np.arange(4, dtype=np.int32), max_new_tokens=4,
+                deadline_s=-1.0)
+
+
+# ---------------------------------------------------------------------------
+# workload shapes (host-only)
+# ---------------------------------------------------------------------------
+
+def test_arrivals_rate_none_is_backlogged_for_every_shape():
+    rng = np.random.default_rng(0)
+    for shape in ("poisson", "bursty", "heavy-tail"):
+        assert not _arrivals(rng, 8, None, shape, 4, 1.5).any()
+
+
+def test_arrivals_monotonic_and_seeded():
+    for shape in ("poisson", "bursty", "heavy-tail"):
+        a = _arrivals(np.random.default_rng(3), 64, 10.0, shape, 8, 1.5)
+        b = _arrivals(np.random.default_rng(3), 64, 10.0, shape, 8, 1.5)
+        assert np.array_equal(a, b), shape
+        assert (np.diff(a) >= 0).all() and (a > 0).all(), shape
+
+
+def test_bursty_arrivals_clump():
+    a = _arrivals(np.random.default_rng(0), 64, 10.0, "bursty", 8, 1.5)
+    gaps = np.diff(a)
+    # intra-burst gaps are ~20x tighter than the 0.1s mean: the median gap
+    # collapses while the long-run rate stays near 10 req/s
+    assert np.median(gaps) < 0.1 / 4
+    assert a[-1] > 64 / 10.0 * 0.3
+
+
+def test_heavy_tail_requires_finite_mean():
+    with pytest.raises(ValueError):
+        _arrivals(np.random.default_rng(0), 8, 10.0, "heavy-tail", 8, 1.0)
+    with pytest.raises(ValueError):
+        _arrivals(np.random.default_rng(0), 8, 10.0, "nope", 8, 1.5)
+
+
+def test_poisson_trace_shape_passthrough():
+    a = poisson_trace(n_requests=12, vocab_size=64, rate=50.0,
+                      shape="bursty", burst=4, seed=1)
+    b = poisson_trace(n_requests=12, vocab_size=64, rate=50.0,
+                      shape="bursty", burst=4, seed=1)
+    assert [r.arrival for r in a] == [r.arrival for r in b]
+    assert [r.prompt.tolist() for r in a] == [r.prompt.tolist() for r in b]
+
+
+# ---------------------------------------------------------------------------
+# engine: one reduced dense engine, reused across runs (run() resets state)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def eng():
+    cfg = get_config("llama2-7b", reduced=True)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    e = ContinuousBatchingEngine(
+        model, params, n_slots=2, max_len=64, chunk=8, decode_ticks=4,
+        seed=0, telemetry=Telemetry(),
+        overload=OverloadConfig(max_queue=64, policy="reject"))
+    e.warmup()
+    return e
+
+
+@pytest.fixture(scope="module")
+def trace(eng):
+    return poisson_trace(n_requests=6, vocab_size=eng.model.cfg.vocab_size,
+                         prompt_len=(4, 10), max_new=(4, 8), seed=11)
+
+
+@pytest.fixture(scope="module")
+def clean_tokens(eng, trace):
+    report = eng.run(list(trace))
+    assert report["aggregate"]["n_retired"] == len(trace)
+    return {r["rid"]: r["tokens"] for r in report["requests"]}
+
+
+def _tokens(report):
+    return {r["rid"]: r["tokens"] for r in report["requests"]}
+
+
+def _errored(report):
+    return sorted(r["rid"] for r in report["requests"]
+                  if r["status"] == "errored")
+
+
+def test_engine_typed_rejects_in_report(eng, trace):
+    bad = Request(prompt=np.zeros(eng.pool.capacity + 1, np.int32),
+                  max_new_tokens=4, rid="too-long")
+    report = eng.run(list(trace) + [bad])
+    rec = {r["rid"]: r for r in report["requests"]}["too-long"]
+    assert rec["status"] == "rejected" and rec["code"] == "prompt_too_long"
+    assert report["aggregate"]["n_rejected"] == 1
+    assert report["aggregate"]["n_retired"] == len(trace)
+
+
+def test_poison_quarantines_only_victim(eng, trace, clean_tokens):
+    victim = trace[2].rid
+    eng.faults = FaultPlan([Fault("poison_nan", rid=victim)])
+    try:
+        report = eng.run(list(trace))
+    finally:
+        eng.faults = None
+    assert _errored(report) == [victim]
+    rec = {r["rid"]: r for r in report["requests"]}[victim]
+    assert rec["code"] == "nonfinite_logits"
+    # the victim keeps its pre-fault prefix (the prefill token), every
+    # bystander stream is byte-identical to the fault-free run
+    assert rec["tokens"] == clean_tokens[victim][:len(rec["tokens"])]
+    assert len(rec["tokens"]) == 1
+    for rid, toks in _tokens(report).items():
+        if rid != victim:
+            assert toks == clean_tokens[rid], rid
+    assert eng.pool.n_used == 0
+    assert report["aggregate"]["n_errored"] == 1
+    assert eng.tel.counts()["fault"] == 1
+    assert eng.tel.counts()["error_retire"] == 1
+
+
+def test_benign_faults_keep_tokens_identical(eng, trace, clean_tokens):
+    eng.faults = FaultPlan([Fault("dispatch_fail", block=1),
+                            Fault("tick_delay", block=0, delay_s=1e-4)])
+    try:
+        report = eng.run(list(trace))
+    finally:
+        eng.faults = None
+    assert _tokens(report) == clean_tokens
+    assert report["aggregate"]["faults_fired"] == 2
+    assert report["aggregate"]["dispatch_retries"] == 1
+    assert report["aggregate"]["n_errored"] == 0
+
+
+def test_drain_finishes_inflight_sheds_queued(eng, trace):
+    eng.run([])                                   # reset run-scoped state
+    for r in trace:
+        eng.submit(r, now=0.0)
+    eng.step(now=0.0)                             # two admitted, rest queued
+    eng.drain()
+    late = eng.submit(Request(prompt=np.zeros(6, np.int32),
+                              max_new_tokens=4, rid="late"), now=0.1)
+    assert late.status == "shed" and late.code == "drain"
+    for i in range(200):
+        if not eng.step(now=0.2 + i * 0.01):
+            break
+    eng.sched.assert_conservation()
+    assert eng.sched.n_retired == 2               # the in-flight pair finish
+    codes = {s.rid: s.code for s in eng.sched.shed}
+    assert all(c == "drain" for c in codes.values()) and len(codes) == 5
+    assert eng.pool.n_used == 0
+    assert eng.tel.counts()["drain"] >= 1
+
+
+def test_cancel_queued_and_inflight(eng, trace):
+    eng.run([])
+    for r in trace:
+        eng.submit(r, now=0.0)
+    eng.step(now=0.0)
+    inflight = next(iter(eng.sched.decoding.values()),
+                    None) or eng.sched.prefilling[0]
+    queued = eng.sched.queue[0]
+    eng.cancel(inflight.rid)
+    eng.cancel(queued.rid)
+    eng.cancel("no-such-rid")                     # dropped silently
+    for i in range(200):
+        if not eng.step(now=0.1 + i * 0.01):
+            break
+    eng.sched.assert_conservation()
+    assert queued.status == "shed" and queued.code == "cancelled"
+    assert inflight.status == "retired" and inflight.code == "cancelled"
+    assert len(inflight.tokens) < inflight.request.max_new_tokens
+    assert eng.sched.n_retired == len(trace) - 1  # cancelled one counts too
+
+
+def test_deadline_enforced_in_flight_and_in_queue(eng):
+    eng.run([])
+    reqs = _reqs(4, plen=6, budget=40, vocab=eng.model.cfg.vocab_size,
+                 deadline_s=0.05)
+    for r in reqs:
+        eng.submit(r, now=0.0)
+    eng.step(now=0.0)                             # 2 in flight, 2 queued
+    for i in range(200):                          # jump past every deadline
+        if not eng.step(now=1.0 + i * 0.01):
+            break
+    eng.sched.assert_conservation()
+    by_rid = {s.rid: s for s in eng.sched.all_states()}
+    n_aborted = sum(1 for s in by_rid.values()
+                    if s.status == "retired" and s.code == "deadline")
+    n_shed = sum(1 for s in by_rid.values()
+                 if s.status == "shed" and s.code == "deadline")
+    assert n_aborted == 2 and n_shed == 2
+    assert eng.pool.n_used == 0
+
+
+def test_predicted_ttft_shed_gate(eng):
+    eng.run([])
+    # prime the EWMAs as if the engine were deeply backlogged: any deadline
+    # tighter than one queue wave is unattainable
+    eng._svc_s, eng._chunk_s = 5.0, 1.0
+    try:
+        for r in _reqs(3, vocab=32):
+            eng.submit(r, now=0.0)                # fill both slots + queue
+        eng.sched.admit(0.0)
+        tight = Request(prompt=np.zeros(6, np.int32), max_new_tokens=4,
+                        rid="tight", ttft_deadline_s=0.01)
+        st = eng.submit(tight, now=0.0)
+        assert st.status == "shed" and st.code == "ttft_unattainable"
+        loose = Request(prompt=np.zeros(6, np.int32), max_new_tokens=4,
+                        rid="loose", ttft_deadline_s=1e6)
+        assert eng.submit(loose, now=0.0).status == "queued"
+    finally:
+        eng._svc_s = eng._chunk_s = 0.0
+        eng.run([])                               # leave the engine clean
+
+
+def test_cold_engine_never_ttft_sheds():
+    # EWMAs start at zero -> _predict_ttft is None -> no shed on a fresh
+    # engine regardless of deadline (checked without building an engine)
+    assert ContinuousBatchingEngine._predict_ttft.__doc__  # documented
+    class _Stub:
+        _chunk_s = _svc_s = 0.0
+    assert ContinuousBatchingEngine._predict_ttft(
+        _Stub(), Request(prompt=np.zeros(4, np.int32), max_new_tokens=2,
+                         ttft_deadline_s=1e-9)) is None
+
+
+# ---------------------------------------------------------------------------
+# auditor
+# ---------------------------------------------------------------------------
+
+def test_auditor_clean_run_counts_checks(eng, trace, clean_tokens):
+    eng.auditor = EngineAuditor()
+    try:
+        report = eng.run(list(trace))
+    finally:
+        auditor, eng.auditor = eng.auditor, None
+    assert auditor.n_checks > 0
+    assert report["aggregate"]["audit_checks"] == auditor.n_checks
+    # zero perturbation: the audited run's streams match the unaudited ones
+    assert _tokens(report) == clean_tokens
+
+
+def test_auditor_detects_injected_corruption(eng, trace):
+    eng.run(list(trace))
+    auditor = EngineAuditor()
+    auditor.check(eng)                            # healthy engine: clean
+    free = eng.pool.free_slots()[0] if hasattr(eng.pool, "free_slots") else 0
+    eng.active[free] = True                       # active row, no owner
+    try:
+        with pytest.raises(AuditViolation) as exc:
+            auditor.check(eng)
+        assert exc.value.invariant == "active_mask"
+    finally:
+        eng.active[free] = False
+    auditor.check(eng)                            # corruption repaired
+
+
+def test_auditor_rate_limit():
+    auditor = EngineAuditor(every=4)
+    seen = []
+    auditor.check = lambda engine: seen.append(engine)   # type: ignore
+    for _ in range(8):
+        auditor.maybe_check("e")
+    assert len(seen) == 2
+
+
+# ---------------------------------------------------------------------------
+# chaos soak: randomized fault plans, full recovery contract per seed
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def chaos_ctx(eng, trace, clean_tokens):
+    return eng, trace, clean_tokens
+
+
+_chaos_ctx = {}
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _bind_chaos_ctx(chaos_ctx):
+    _chaos_ctx["ctx"] = chaos_ctx
+    yield
+    _chaos_ctx.clear()
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(min_value=0, max_value=2 ** 20))
+def test_chaos_soak_random_plans(seed):
+    """Any seeded FaultPlan over the shared trace must satisfy the recovery
+    contract: only fired victims error, bystanders byte-identical, zero
+    slot/source leaks, and an exact replay under ``plan.replay()``."""
+    eng, trace, clean = _chaos_ctx["ctx"]
+    plan = FaultPlan.random(seed, [r.rid for r in trace], n_faults=3)
+    eng.faults = plan
+    try:
+        faulted = eng.run(list(trace))
+        eng.faults = plan.replay()
+        replayed = eng.run(list(trace))
+    finally:
+        eng.faults = None
+    victims = sorted(plan.victims())
+    assert _errored(faulted) == victims
+    ft = _tokens(faulted)
+    for rid, toks in clean.items():
+        if rid in victims:
+            assert ft[rid] == toks[:len(ft[rid])], (seed, rid)
+        else:
+            assert ft[rid] == toks, (seed, rid)
+    assert _tokens(replayed) == ft and _errored(replayed) == victims
+    assert eng.pool.n_used == 0
+    assert faulted["aggregate"]["n_retired"] == len(trace) - len(victims)
+
+
+# ---------------------------------------------------------------------------
+# ingest faults need a source-bearing config (whisper reduced)
+# ---------------------------------------------------------------------------
+
+def test_ingest_fail_quarantines_before_device_write():
+    cfg = get_config("whisper-small", reduced=True)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    e = ContinuousBatchingEngine(model, params, n_slots=2, max_len=64,
+                                 chunk=8, decode_ticks=2, seed=0)
+    e.warmup()
+    trace = poisson_trace(n_requests=4, vocab_size=cfg.vocab_size,
+                          prompt_len=(4, 8), max_new=(3, 5), seed=5,
+                          source_len=(2, cfg.source_len),
+                          source_dim=cfg.d_model)
+    clean = e.run(list(trace))
+    victim = trace[1].rid
+    e.faults = FaultPlan([Fault("ingest_fail", rid=victim)])
+    try:
+        report = e.run(list(trace))
+    finally:
+        e.faults = None
+    assert _errored(report) == [victim]
+    rec = {r["rid"]: r for r in report["requests"]}[victim]
+    assert rec["code"] == "source_ingest_failed" and rec["tokens"] == []
+    for rid, toks in _tokens(clean).items():
+        if rid != victim:
+            assert _tokens(report)[rid] == toks
+    assert e.pool.n_used == 0 and e.src_pool.n_used == 0
