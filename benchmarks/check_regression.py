@@ -21,6 +21,13 @@ Checks, per arch entry:
 * ``telemetry overhead`` — when the fresh entry carries a telemetry
   section (``--trace-out`` runs), enabled-vs-disabled throughput must be
   within 3% and tokens identical;
+* ``quant`` entries (``--verify-agreement`` runs on ``+w4a8`` archs):
+  ``agreement_rate`` gated both absolutely (>= the entry's own
+  ``agreement_target``, the 0.90 floor) and relatively (>= baseline - 2%,
+  so a quantization change that quietly costs agreement is a regression
+  even while clearing the floor); ``kv_bytes_per_slot`` and the fp32-twin
+  ``kv_bytes_ratio`` pinned exactly — the byte footprint is a function of
+  shapes and dtypes, any drift means the cache format changed;
 * ``chaos`` entries (``bench: "serving_chaos"`` from ``--faults`` runs)
   swap the perf tolerances for the recovery contract: the deterministic
   counters (errored / shed / generated tokens / faults fired / dispatch
@@ -58,6 +65,11 @@ TOLERANCES = {
     "generated_tokens": ("exact", 0),
 }
 TELEMETRY_OVERHEAD_MAX_PCT = 3.0
+# quant (+w4a8) entries: agreement may wobble a little across BLAS builds
+# (a flipped token flips every token after it), so the relative gate
+# allows 2%; the absolute floor (the entry's own agreement_target) always
+# applies. Byte metrics are shape-determined and pinned exactly.
+QUANT_AGREEMENT_REL_TOL = 0.02
 
 # trace parameters that must be identical for the numbers to be comparable
 # (keys absent from both entries — e.g. the chaos / trace-shape knobs on
@@ -167,6 +179,33 @@ def compare_entry(fresh: dict, base: dict) -> list[dict]:
     if bad is not None:
         add("verify_mismatched", len(bad), 0, "== 0", len(bad) == 0,
             str(bad) if bad else "")
+
+    fq, bq = fresh.get("quant"), base.get("quant")
+    if fq is not None or bq is not None:
+        if fq is None or bq is None:
+            add("quant_section", fq is not None, bq is not None,
+                "present in both", False,
+                "quant section missing on one side — rerun with "
+                "--verify-agreement or regenerate the baseline")
+        else:
+            f = fq.get("agreement_rate")
+            floor = fq.get("agreement_target")
+            add("quant.agreement_floor", f, floor, f">= {floor}",
+                f is not None and floor is not None and f >= floor,
+                "absolute floor")
+            b = bq.get("agreement_rate")
+            if b is not None:
+                limit = round(b * (1 - QUANT_AGREEMENT_REL_TOL), 4)
+                add("quant.agreement_rate", f, b, f">= {limit}",
+                    f is not None and f >= limit,
+                    f"-{QUANT_AGREEMENT_REL_TOL:.0%} of baseline")
+            fb = _deep_get(fresh, "continuous.kv_bytes_per_slot")
+            bb = _deep_get(base, "continuous.kv_bytes_per_slot")
+            add("kv_bytes_per_slot", fb, bb, f"== {bb}",
+                fb is not None and fb == bb, "exact (cache format)")
+            fr, br = fq.get("kv_bytes_ratio"), bq.get("kv_bytes_ratio")
+            add("quant.kv_bytes_ratio", fr, br, f"== {br}",
+                fr is not None and fr == br, "exact (fp32-twin ratio)")
 
     tel = fresh.get("telemetry")
     if tel is not None:

@@ -50,6 +50,18 @@ throughput delta is reported (and gated under ``--check``) as the
 telemetry overhead, the token streams are checked identical, and the
 pass's event stream is written as a Chrome/Perfetto trace.
 
+``--verify-agreement`` is the quantized (``+w4a8``) leg's replacement for
+``--verify``: quantized decode is deliberately not token-exact vs fp32, so
+instead of equality it scores greedy token **agreement** between the
+continuous engine and per-request lock-step generation on the *same*
+quantized model (both engines quantize identically, so this isolates
+batching effects from quantization noise), gates it at
+``AGREEMENT_TARGET`` under ``--check``, and reports the quantized
+``kv_bytes_per_slot`` as a ratio of the fp32 twin's (same arch minus the
+``+w4a8`` axis; gated at ``KV_RATIO_TARGET``) plus an informational
+prefill-logits MAE probe vs the fp32 twin — the ``quant`` section of the
+JSON, pinned by ``check_regression.py`` like the other legs.
+
 ``--faults`` switches to the chaos leg: fault-free run, seeded-FaultPlan
 run, and exact replay on one engine (invariant auditor on), gating
 victim-only quarantine, unaffected-stream byte-identity, deterministic
@@ -88,6 +100,12 @@ from repro.serving import (ContinuousBatchingEngine, EngineAuditor,
 from repro.serving.workload import TRACE_SHAPES
 
 SPEEDUP_TARGET = 1.3
+# quant (+w4a8) leg gates: greedy continuous-vs-lockstep token agreement on
+# the same quantized model, and the int8 cache's byte footprint vs the fp32
+# twin (int8 rows + bf16 scales = 0.25 + 0.5/Dh — 0.28125 at the reduced
+# configs' Dh = 16, under the 0.3x budget)
+AGREEMENT_TARGET = 0.90
+KV_RATIO_TARGET = 0.3
 # BENCH entry schema, stamped into every JSON so check_regression.py can
 # refuse cross-schema comparisons (keep in sync with
 # benchmarks/check_regression.py; bump on any semantic change to entries)
@@ -208,6 +226,65 @@ def verify_equivalence(model, params, trace, report, *, max_len) -> list:
     return bad
 
 
+def verify_agreement(model, params, trace, report, *, max_len) -> tuple:
+    """Quantized (``+w4a8``) twin of :func:`verify_equivalence`: score the
+    continuous engine's greedy outputs against per-request lock-step
+    generation on the **same quantized model** as a token agreement rate
+    instead of demanding equality. Both engines quantize the same params in
+    ``__init__``, so single-chunk prompts agree bit-exactly and multi-chunk
+    prompts diverge only through the chunked prefill's int8 prefix re-read
+    (see tests/test_serving_conformance.py for the two-tier contract).
+    Returns ``(rate, matched, total)``."""
+    cfg = model.cfg
+    with_src = needs_source(cfg) and any(r.source is not None for r in trace)
+    ref = ServingEngine(model, params, max_len=max_len, batch=1,
+                        source_len=cfg.source_len if with_src else None)
+    by_rid = {r["rid"]: r for r in report["requests"]}
+    matched = total = 0
+    for req in trace:
+        kw = {}
+        if with_src and req.source is not None:
+            kw["source"], kw["source_len"] = _padded_sources(
+                [req], cfg.source_len, cfg.d_model, 1)
+        want = np.asarray(ref.generate(jnp.asarray(req.prompt)[None],
+                                       steps=req.max_new_tokens, **kw))[0]
+        got = by_rid[req.rid]["tokens"]
+        matched += sum(a == b for a, b in zip(got, want.tolist()))
+        total += len(want)
+    return (matched / total if total else 1.0), matched, total
+
+
+def _kv_bytes_per_slot(eng) -> int:
+    """Static per-slot KV footprint of an engine's cache — the same key
+    set and arithmetic as ``ContinuousBatchingEngine.report()``, usable on
+    a freshly built (never run) fp32 twin engine."""
+    kv = [eng.cache[k] for k in ("k", "v", "k_scale", "v_scale",
+                                 "cross_k", "cross_v", "src_k", "src_v",
+                                 "src_k_scale", "src_v_scale")
+          if k in eng.cache]
+    return sum(int(a.size) * a.dtype.itemsize for a in kv) // eng.pool.n_slots
+
+
+def quant_mae_probe(model, params, vocab_size: int) -> float:
+    """Informational fp32-twin comparison: prefill-logits MAE on a seeded
+    probe batch, normalized by the fp32 logit spread. Free-running token
+    agreement vs fp32 cliffs on top-2 gaps (MoE routing, small-vocab
+    reduced configs), so the fp32 comparison is pinned where quantization
+    actually bounds something; the serving-level gate is
+    :func:`verify_agreement` on the quantized pair."""
+    from repro.models.quantized import quantize_params
+    qparams = quantize_params(params)
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(rng.integers(0, vocab_size, (4, 16)), jnp.int32)
+    cache_fp = model.init_cache(4, 64, kv_dtype=jnp.float32)
+    cache_q = model.init_cache(4, 64, kv_dtype=jnp.int8)
+    lf, _ = jax.jit(model.prefill)(params, prompts, cache_fp, None, None)
+    lq, _ = jax.jit(model.prefill)(qparams, prompts, cache_q, None, None)
+    lf = np.asarray(lf, np.float64)
+    lq = np.asarray(lq, np.float64)
+    return float(np.abs(lq - lf).mean() / lf.std())
+
+
 def best_of_interleaved(runners: dict, repeats: int) -> tuple[dict, list]:
     """Alternate one pass per engine, ``repeats`` rounds; keep each engine's
     fastest pass. Interleaving means a slow host phase degrades the same
@@ -288,6 +365,14 @@ def main(argv=None) -> int:
                     help="check continuous greedy outputs token-for-token "
                          "against per-request generation (exit non-zero on "
                          "any mismatch)")
+    ap.add_argument("--verify-agreement", action="store_true",
+                    help="quantized (+w4a8) archs: score continuous greedy "
+                         "outputs against per-request generation on the "
+                         "same quantized model as a token agreement rate "
+                         f"(--check gates >= {AGREEMENT_TARGET}), and "
+                         "report kv_bytes_per_slot as a ratio of the fp32 "
+                         f"twin's (--check gates <= {KV_RATIO_TARGET}x) "
+                         "plus an informational logits-MAE probe")
     ap.add_argument("--trace-out", default=None,
                     help="write a Chrome/Perfetto trace (.trace.json) of a "
                          "telemetry-enabled continuous pass, and report the "
@@ -479,12 +564,51 @@ def run_arch(arch: str, args, trace_out: Path | None = None
               f"[{'PASS' if tel_ok else 'FAIL'}]")
         if args.check and not tel_ok:
             rc = 1
+    quant_info = None
+    if args.verify_agreement:
+        if not cfg.w4a8_serve:
+            print(f"  [note] --verify-agreement skipped: {cfg.name} has no "
+                  "+w4a8 axis (use --verify for exact equivalence)")
+        else:
+            rate, matched, total = verify_agreement(
+                model, params, trace, cont_runner.holder["report"],
+                max_len=args.max_len)
+            # fp32 twin: the same arch minus the +w4a8 axis — its (never
+            # run) engine's cache is the denominator of the byte ratio
+            base_arch = arch.replace("+w4a8", "")
+            t_cfg = get_config(base_arch, reduced=args.reduced)
+            t_eng = ContinuousBatchingEngine(
+                build_model(t_cfg), params, n_slots=args.n_slots,
+                max_len=args.max_len, chunk=args.chunk, seed=args.seed,
+                decode_ticks=args.decode_ticks)
+            fp_bytes = _kv_bytes_per_slot(t_eng)
+            ratio = round(cont["kv_bytes_per_slot"] / fp_bytes, 4)
+            mae = round(quant_mae_probe(model, params, cfg.vocab_size), 4)
+            quant_ok = rate >= AGREEMENT_TARGET and ratio <= KV_RATIO_TARGET
+            quant_info = {
+                "agreement_rate": round(rate, 4),
+                "agreement_matched": matched,
+                "agreement_total": total,
+                "agreement_target": AGREEMENT_TARGET,
+                "kv_bytes_per_slot_fp32": fp_bytes,
+                "kv_bytes_ratio": ratio,
+                "kv_ratio_max": KV_RATIO_TARGET,
+                "logits_mae_over_spread": mae,     # informational
+            }
+            print(f"  quant: agreement {rate:.4f} ({matched}/{total} "
+                  f"tokens, floor {AGREEMENT_TARGET}), kv bytes "
+                  f"{cont['kv_bytes_per_slot']} vs fp32 twin {fp_bytes} "
+                  f"= {ratio}x (max {KV_RATIO_TARGET}x), logits MAE/spread "
+                  f"{mae} [{'PASS' if quant_ok else 'FAIL'}]")
+            if args.check and not quant_ok:
+                rc = 1
     result = {
         "bench": "serving_continuous_vs_lockstep",
         **_entry_stamp(cfg, args, trace, src_range),
         "lockstep": lock, "continuous": cont,
         "speedup_tokens_per_s": speedup,
         "speedup_target": SPEEDUP_TARGET,
+        **({"quant": quant_info} if quant_info else {}),
         **({"telemetry": telemetry_info} if telemetry_info else {}),
     }
     if args.verify:

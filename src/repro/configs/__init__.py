@@ -34,6 +34,17 @@ _ALIAS = {
 
 
 def get_config(name: str, reduced: bool = False) -> ModelConfig:
+    if name.endswith("+w4a8"):
+        # quantized serving variant: int4-packed projections + int8
+        # activations (paper §IV-B) AND symmetric int8 KV with per-(slot,
+        # position, head) f32 scales — ~4x less weight traffic and ~4x
+        # smaller kv_bytes_per_slot. Deliberately NOT token-exact: +w4a8
+        # configs are held to the measured-agreement conformance tier
+        # (greedy agreement >= 0.90 vs the fp32 twin; docs/serving.md
+        # §Quantized serving) instead of token equality. Suffixes compose:
+        # "<arch>+ring+w4a8" serves a quantized ring cache.
+        base = get_config(name[: -len("+w4a8")], reduced)
+        return base.replace(w4a8_serve=True, name=base.name + "+w4a8")
     if name.endswith("+ring"):
         # ring-KV variant of an SWA arch: O(window) per-slot caches
         # (serving_bench --arch h2o-danube-1.8b+ring, conformance tests)

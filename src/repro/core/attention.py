@@ -34,7 +34,9 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
                      lengths: jax.Array, *, impl: DecodeImpl = "blockwise",
                      window: int | None = None, ring: bool = False,
                      block_size: int = 512,
-                     scale: float | None = None) -> jax.Array:
+                     scale: float | None = None,
+                     k_scale: jax.Array | None = None,
+                     v_scale: jax.Array | None = None) -> jax.Array:
     """q: [B, Hq, D]; k_cache/v_cache: [B, S, Hkv, D]; lengths: [B] int32.
     Returns [B, Hq, D]. Hq must be a multiple of Hkv (GQA groups).
 
@@ -50,11 +52,31 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     ``swiftkv_decode_blockwise``): under the vmap below each batch row runs
     ``cdiv(length, block)`` block steps, so a big preallocated cache costs
     attention work proportional to the longest *active* sequence — not to
-    ``S`` — on every decode tick."""
+    ``S`` — on every decode tick.
+
+    ``k_scale`` / ``v_scale``: optional [B, Hkv, S] float (f32/bf16) per-(row, head,
+    position) dequant scales for an **int8 KV cache** (the ``+w4a8``
+    serving form, ``quantization.quantize_kv``). The scale multiply rides
+    the blockwise/kernel block loads — no dequantized copy of the cache is
+    materialized. ``tokenwise`` / ``sp`` have no int8 form and fall back to
+    blockwise; ``naive`` dequantizes up front (it is the dense oracle)."""
     b, hq, d = q.shape
     hkv = k_cache.shape[2]
     assert hq % hkv == 0, (hq, hkv)
     g = hq // hkv
+
+    if k_scale is not None:
+        if impl in ("sp", "tokenwise"):
+            impl = "blockwise"   # no seq-sharded / per-token int8 form
+        if impl == "naive":
+            # dense oracle: dequantize whole (small, test-sized) caches
+            sc = jnp.swapaxes(k_scale, 1, 2)[..., None]   # [B, S, Hkv, 1]
+            return decode_attention(
+                q, k_cache.astype(jnp.float32) * sc,
+                v_cache.astype(jnp.float32) * jnp.swapaxes(
+                    v_scale, 1, 2)[..., None],
+                lengths, impl="naive", window=window, ring=ring,
+                block_size=block_size, scale=scale)
 
     if ring:
         if window is None:
@@ -89,7 +111,8 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
         from repro.kernels.swiftkv_decode import ops as kops
         return kops.swiftkv_decode(q, k_cache, v_cache, lengths,
                                    window=window, ring=ring,
-                                   block_k=block_size, scale=scale)
+                                   block_k=block_size, scale=scale,
+                                   k_scale=k_scale, v_scale=v_scale)
 
     # group queries: [B, Hkv, G, D]; caches to [B, Hkv, S, D]
     qg = q.reshape(b, hkv, g, d)
@@ -110,6 +133,15 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     else:
         raise ValueError(impl)
 
+    if k_scale is not None:
+        # int8 blockwise: scales ride the same vmap nest, one [S] vector per
+        # (row, head) shared across the head group
+        per_group = jax.vmap(fn, in_axes=(0, None, None, None, None, None))
+        per_head = jax.vmap(per_group, in_axes=(0, 0, 0, None, 0, 0))
+        per_batch = jax.vmap(per_head, in_axes=(0, 0, 0, 0, 0, 0))
+        out = per_batch(qg, kc, vc, lengths, k_scale, v_scale)
+        return out.reshape(b, hq, d)
+
     # vmap: queries within a group share one KV scan (in_axes k/v None)
     per_group = jax.vmap(fn, in_axes=(0, None, None, None))      # over G
     per_head = jax.vmap(per_group, in_axes=(0, 0, 0, None))      # over Hkv
@@ -122,7 +154,9 @@ def decode_cross_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
                            entries: jax.Array, lengths: jax.Array, *,
                            impl: DecodeImpl = "blockwise",
                            block_size: int = 512,
-                           scale: float | None = None) -> jax.Array:
+                           scale: float | None = None,
+                           k_scale: jax.Array | None = None,
+                           v_scale: jax.Array | None = None) -> jax.Array:
     """Ragged cross-attention decode read over a shared **source-KV pool**.
 
     q: [B, Hq, D] (one decoder token per slot); k_pool / v_pool:
@@ -139,7 +173,11 @@ def decode_cross_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
     index into the KV block reads (``swiftkv_decode_pooled``), so no
     per-slot copy of the pool is ever materialized. ``tokenwise`` / ``sp``
     / ``kernel`` have no pooled form and fall back to blockwise; ``naive``
-    gathers the per-slot entries and runs the dense oracle."""
+    gathers the per-slot entries and runs the dense oracle.
+
+    ``k_scale`` / ``v_scale``: optional [E, Hkv, S] float (f32/bf16) per-(entry, head,
+    position) dequant scales for an int8 source-KV pool — folded into the
+    pooled block reads like the self-attention form."""
     b, hq, d = q.shape
     hkv = k_pool.shape[2]
     assert hq % hkv == 0, (hq, hkv)
@@ -151,13 +189,28 @@ def decode_cross_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
         # dense oracle: gather each slot's entry, then the batched reference
         kc = jnp.take(k_pool, entries, axis=0)           # [B, S, Hkv, D]
         vc = jnp.take(v_pool, entries, axis=0)
-        return decode_attention(q, kc, vc, lengths, impl="naive", scale=scale)
+        return decode_attention(
+            q, kc, vc, lengths, impl="naive", scale=scale,
+            k_scale=(None if k_scale is None
+                     else jnp.take(k_scale, entries, axis=0)),
+            v_scale=(None if v_scale is None
+                     else jnp.take(v_scale, entries, axis=0)))
 
     qg = q.reshape(b, hkv, g, d)
     kp = jnp.swapaxes(k_pool, 1, 2)                      # [E, Hkv, S, D]
     vp = jnp.swapaxes(v_pool, 1, 2)
     fn = functools.partial(swiftkv.swiftkv_decode_pooled,
                            block_size=block_size, scale=scale)
+    if k_scale is not None:
+        # pooled int8: the [E, S] scale planes broadcast like the pool
+        per_group = jax.vmap(fn, in_axes=(0, None, None, None, None,
+                                          None, None))             # over G
+        per_head = jax.vmap(per_group, in_axes=(0, 1, 1, None, None,
+                                                1, 1))             # over Hkv
+        per_batch = jax.vmap(per_head, in_axes=(0, None, None, 0, 0,
+                                                None, None))       # over B
+        out = per_batch(qg, kp, vp, entries, lengths, k_scale, v_scale)
+        return out.reshape(b, hq, d)
     # vmap: queries within a group share one pooled scan; the pool itself is
     # broadcast (in_axes None) — only (q, entry, length) are per-row
     per_group = jax.vmap(fn, in_axes=(0, None, None, None, None))  # over G

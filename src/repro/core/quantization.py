@@ -109,6 +109,30 @@ def w4a8_matmul_ref(x: jax.Array, qw: QuantizedLinear,
     return out
 
 
+def quantize_kv(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Symmetric int8 over the head dimension (last axis) — the serving KV
+    cache's storage form. x: [..., Dh] float -> (q [..., Dh] int8,
+    scale [...] f32) with scale = amax / 127 per leading index (one scale
+    per (slot, position, kv-head) in the cache layout).
+
+    Properties the test layer pins: a constant vector ``c * ones`` round
+    trips *exactly* (scale = |c|/127, q = ±127, dequant = c); an all-zero
+    row stores scale 0 (not 1), so a released slot's device state is
+    all-zeros — rows and scales both — and gaussian rows round-trip within
+    ~1% relative error (int8 is 25x finer than the int4 weight grid)."""
+    amax = jnp.max(jnp.abs(x), axis=-1)
+    scale = jnp.where(amax > 0, amax / 127.0, 0.0).astype(jnp.float32)
+    safe = jnp.where(scale > 0, scale, 1.0)[..., None]
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / safe), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize_kv(q: jax.Array, scale: jax.Array) -> jax.Array:
+    """Inverse of :func:`quantize_kv`. q: [..., Dh] int8, scale: [...] f32
+    -> [..., Dh] f32."""
+    return q.astype(jnp.float32) * scale[..., None]
+
+
 def dequantize_w4(qw: QuantizedLinear, group: int = GROUP) -> jax.Array:
     w = unpack_w4(qw.packed).astype(jnp.float32)
     k, n = w.shape

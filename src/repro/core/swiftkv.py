@@ -163,6 +163,8 @@ def state_finalize(state: SwiftKVState) -> jax.Array:
 
 def swiftkv_decode_blockwise(q: jax.Array, k: jax.Array, v: jax.Array,
                              length: jax.Array | None = None,
+                             k_scale: jax.Array | None = None,
+                             v_scale: jax.Array | None = None,
                              *, block_size: int = 512,
                              window: int | None = None,
                              ring: bool = False,
@@ -182,6 +184,14 @@ def swiftkv_decode_blockwise(q: jax.Array, k: jax.Array, v: jax.Array,
     ``(mu, Z, Y)`` recurrence is order-independent, so ring order and
     temporal order fold to the same result. Requires ``window`` (rings only
     exist for SWA configs).
+
+    ``k_scale`` / ``v_scale``: optional [S] float per-position dequant scales
+    for an **int8 KV cache** (``quantization.quantize_kv`` storage form).
+    The scale multiply folds into the existing blockwise load — one extra
+    [Bk] slice + broadcast per block, no second pass and no materialized
+    f32 copy of the cache — so the int8 ring path keeps the zero-copy
+    contract (position arithmetic only; asserted in
+    tests/test_kernels_swiftkv.py).
 
     The loop trip count is **length-adaptive**: blocks past the valid
     prefix are exact state no-ops (every lane masked), so the loop runs
@@ -203,12 +213,20 @@ def swiftkv_decode_blockwise(q: jax.Array, k: jax.Array, v: jax.Array,
     if pad:
         k = jnp.pad(k, ((0, pad), (0, 0)))
         v = jnp.pad(v, ((0, pad), (0, 0)))
+        if k_scale is not None:
+            k_scale = jnp.pad(k_scale, ((0, pad),))
+            v_scale = jnp.pad(v_scale, ((0, pad),))
     qf = q.astype(jnp.float32)
 
     def body(i, state):
         start = i * block_size
         k_blk = jax.lax.dynamic_slice_in_dim(k, start, block_size).astype(jnp.float32)
         v_blk = jax.lax.dynamic_slice_in_dim(v, start, block_size).astype(jnp.float32)
+        if k_scale is not None:
+            k_blk = k_blk * jax.lax.dynamic_slice_in_dim(
+                k_scale, start, block_size)[:, None]
+            v_blk = v_blk * jax.lax.dynamic_slice_in_dim(
+                v_scale, start, block_size)[:, None]
         t = start + jnp.arange(block_size)
         if ring:
             p = length - 1
@@ -232,7 +250,9 @@ def swiftkv_decode_blockwise(q: jax.Array, k: jax.Array, v: jax.Array,
 
 
 def swiftkv_decode_pooled(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
-                          entry: jax.Array, length: jax.Array, *,
+                          entry: jax.Array, length: jax.Array,
+                          k_scale: jax.Array | None = None,
+                          v_scale: jax.Array | None = None, *,
                           block_size: int = 512,
                           scale: float | None = None) -> jax.Array:
     """Blockwise single-pass SwiftKV decode reading one entry of a shared
@@ -253,7 +273,11 @@ def swiftkv_decode_pooled(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
     length-adaptive trip count as :func:`swiftkv_decode_blockwise` — the
     loop runs ``cdiv(length, block_size)`` iterations, so a short source
     costs attention work proportional to its own length, not the pool
-    allocation."""
+    allocation.
+
+    ``k_scale`` / ``v_scale``: optional [E, S] float per-(entry, position)
+    dequant scales for an int8 source-KV pool — the entry-indirected
+    analogue of the blockwise int8 read (one extra [Bk] slice per block)."""
     d = q.shape[-1]
     s_pool = k_pool.shape[1]
     scale = (1.0 / jnp.sqrt(d)) if scale is None else scale
@@ -264,6 +288,9 @@ def swiftkv_decode_pooled(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
     if pad:
         k_pool = jnp.pad(k_pool, ((0, 0), (0, pad), (0, 0)))
         v_pool = jnp.pad(v_pool, ((0, 0), (0, pad), (0, 0)))
+        if k_scale is not None:
+            k_scale = jnp.pad(k_scale, ((0, 0), (0, pad)))
+            v_scale = jnp.pad(v_scale, ((0, 0), (0, pad)))
     qf = q.astype(jnp.float32)
 
     def body(i, state):
@@ -272,6 +299,11 @@ def swiftkv_decode_pooled(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
             k_pool, (entry, start, 0), (1, block_size, d))[0].astype(jnp.float32)
         v_blk = jax.lax.dynamic_slice(
             v_pool, (entry, start, 0), (1, block_size, d))[0].astype(jnp.float32)
+        if k_scale is not None:
+            k_blk = k_blk * jax.lax.dynamic_slice(
+                k_scale, (entry, start), (1, block_size))[0][:, None]
+            v_blk = v_blk * jax.lax.dynamic_slice(
+                v_scale, (entry, start), (1, block_size))[0][:, None]
         t = start + jnp.arange(block_size)
         valid = t < length
         s_blk = (k_blk @ qf) * scale  # [Bk]

@@ -58,13 +58,21 @@ def _exp_lut(x, lut_vals, lut_slopes):
 
 def _kernel(lengths_ref,                     # scalar prefetch [B] int32
             *refs, block_k: int, n_blocks: int, window: int | None,
-            scale: float, exp_mode: str, ring: bool):
+            scale: float, exp_mode: str, ring: bool, quant: bool):
+    refs = list(refs)
+    q_ref, k_ref, v_ref = refs[:3]
+    refs = refs[3:]
+    if quant:
+        # int8 KV: per-(row, head, position) f32 dequant scales arrive as
+        # (1, 1, block_k) tiles through the same clamped kv index map
+        ks_ref, vs_ref = refs[:2]
+        refs = refs[2:]
     if exp_mode == "lut":
-        q_ref, k_ref, v_ref, lut_ref, o_ref, m_scr, z_scr, y_scr = refs
+        lut_ref, o_ref, m_scr, z_scr, y_scr = refs
         exp = functools.partial(_exp_lut, lut_vals=lut_ref[0],
                                 lut_slopes=lut_ref[1])
     else:
-        q_ref, k_ref, v_ref, o_ref, m_scr, z_scr, y_scr = refs
+        o_ref, m_scr, z_scr, y_scr = refs
         exp = jnp.exp
     b = pl.program_id(0)
     i = pl.program_id(2)
@@ -83,6 +91,14 @@ def _kernel(lengths_ref,                     # scalar prefetch [B] int32
         # (1, block_k, 1, D) blocks, no host-side swapaxes/pad copy
         k = jnp.squeeze(k_ref[...], axis=(0, 2)).astype(jnp.float32)
         v = jnp.squeeze(v_ref[...], axis=(0, 2)).astype(jnp.float32)
+        if quant:
+            # dequantize in registers: int8 tile x per-position scale —
+            # the cache itself stays int8 in HBM (the 4x byte win); scales
+            # may arrive bf16 (the cache storage dtype) — widen to f32
+            k = k * jnp.squeeze(ks_ref[...], axis=(0, 1)).astype(
+                jnp.float32)[:, None]
+            v = v * jnp.squeeze(vs_ref[...], axis=(0, 1)).astype(
+                jnp.float32)[:, None]
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32) * scale
         slot = i * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
@@ -125,6 +141,8 @@ def swiftkv_decode_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
                           lengths: jax.Array, *, block_k: int = 512,
                           window: int | None = None, ring: bool = False,
                           scale: float, exp_mode: str = "native",
+                          k_scale: jax.Array | None = None,
+                          v_scale: jax.Array | None = None,
                           interpret: bool = False) -> jax.Array:
     """q: [B, Hkv, G, D]; k, v: [B, S, Hkv, D] — the **cache-native**
     layout, consumed directly through the BlockSpec index maps (S a
@@ -136,11 +154,19 @@ def swiftkv_decode_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
     lengths-1``); only the validity mask changes — the same index maps
     stream the wrapped cache with zero copies. The unwrapped prefix clamp
     still applies: while ``lengths <= S`` blocks past the written prefix
-    are neither fetched nor folded."""
+    are neither fetched nor folded.
+
+    ``k_scale`` / ``v_scale``: optional [B, Hkv, S] float (f32 or bf16)
+    dequant scales for an **int8** cache — streamed as (1, 1, block_k)
+    tiles through the same clamped index map and multiplied into the KV
+    tile in VMEM, so the int8 form adds S x itemsize bytes of scale
+    traffic per (row, head) against the 3 x S x D bytes it saves on the
+    cache itself."""
     bsz, hkv, g, d = q.shape
     s_len = k.shape[1]
     assert s_len % block_k == 0, (s_len, block_k)
     n_blocks = s_len // block_k
+    quant = k_scale is not None
 
     def q_map(b, h, i, lens):
         return (b, h, 0, 0)
@@ -150,12 +176,20 @@ def swiftkv_decode_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
         last = jnp.maximum(pl.cdiv(lens[b], block_k) - 1, 0)
         return (b, jnp.minimum(i, last), h, 0)
 
+    def sc_map(b, h, i, lens):
+        last = jnp.maximum(pl.cdiv(lens[b], block_k) - 1, 0)
+        return (b, h, jnp.minimum(i, last))
+
     in_specs = [
         pl.BlockSpec((1, 1, g, d), q_map),
         pl.BlockSpec((1, block_k, 1, d), kv_map),
         pl.BlockSpec((1, block_k, 1, d), kv_map),
     ]
     operands = [q, k, v]
+    if quant:
+        in_specs += [pl.BlockSpec((1, 1, block_k), sc_map),
+                     pl.BlockSpec((1, 1, block_k), sc_map)]
+        operands += [k_scale, v_scale]
     if exp_mode == "lut":
         lut = jnp.stack([jnp.asarray(_LUT_VALS, jnp.float32),
                          jnp.asarray(_LUT_SLOPES, jnp.float32)])
@@ -175,7 +209,7 @@ def swiftkv_decode_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
     )
     kernel = functools.partial(_kernel, block_k=block_k, n_blocks=n_blocks,
                                window=window, scale=scale, exp_mode=exp_mode,
-                               ring=ring)
+                               ring=ring, quant=quant)
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,

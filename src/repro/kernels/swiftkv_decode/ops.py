@@ -29,6 +29,8 @@ def swiftkv_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
                    lengths: jax.Array, *, window: int | None = None,
                    block_k: int = 512, scale: float | None = None,
                    exp_mode: str = "native", ring: bool = False,
+                   k_scale: jax.Array | None = None,
+                   v_scale: jax.Array | None = None,
                    interpret: bool | None = None) -> jax.Array:
     """SwiftKV single-pass decode attention (Pallas).
 
@@ -47,7 +49,15 @@ def swiftkv_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     a linear cache — zero-copy, no host-side unrotate — with per-slot
     positions recovered arithmetically inside the kernel. Requires
     ``window`` (rings only exist for SWA configs).
+
+    ``k_scale`` / ``v_scale``: optional [B, Hkv, S] float dequant scales for
+    an int8 cache (``+w4a8`` serving) — streamed blockwise alongside the
+    KV tiles and multiplied in VMEM; the alignment contract is unchanged
+    (the scale's S axis tiles with the same block size).
     """
+    if (k_scale is None) != (v_scale is None):
+        raise ValueError("swiftkv_decode: pass both k_scale and v_scale "
+                         "or neither")
     if ring and window is None:
         raise ValueError("swiftkv_decode: ring caches are windowed — pass "
                          "window with ring=True")
@@ -77,5 +87,6 @@ def swiftkv_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
                                 lengths.astype(jnp.int32),
                                 block_k=block_k, window=window, ring=ring,
                                 scale=scale, exp_mode=exp_mode,
+                                k_scale=k_scale, v_scale=v_scale,
                                 interpret=interpret)
     return out.reshape(b, hq, d)

@@ -63,10 +63,18 @@ def linear(p: dict, name: str, x: jax.Array) -> jax.Array:
     quantized pair ``p[name+'__qp']`` (int4-packed) / ``p[name+'__qs']``
     (group scales) produced by ``models.quantized.quantize_params`` — the
     paper's dual-mode array (§IV-B): the same call site runs f32/bf16 dense
-    or INT4xINT8 GEMV."""
+    or INT4xINT8 GEMV. The quantized leg is backend-aware: on TPU it
+    dispatches the Pallas ``kernels/gemv_w4a8`` kernel; elsewhere it runs
+    the pure-jnp reference semantics (NOT interpret-mode Pallas, which is
+    orders of magnitude too slow for CPU CI) — both compute the identical
+    int32-accumulate / group-rescale math, so tests pin them against each
+    other rather than against the float matmul."""
     qp = p.get(name + "__qp")
     if qp is None:
         return x @ p[name].astype(x.dtype)
+    if jax.default_backend() == "tpu":
+        from repro.kernels.gemv_w4a8.ops import gemv_w4a8
+        return gemv_w4a8(x, qp, p[name + "__qs"]).astype(x.dtype)
     from repro.core.quantization import QuantizedLinear, w4a8_matmul_ref
     qw = QuantizedLinear(packed=qp, scale=p[name + "__qs"], bias=None)
     return w4a8_matmul_ref(x, qw).astype(x.dtype)

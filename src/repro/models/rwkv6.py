@@ -16,7 +16,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from .layers import dense_init, rms_norm
+from .layers import dense_init, linear, rms_norm
 
 
 class RWKVLayerState(NamedTuple):
@@ -83,10 +83,12 @@ def rwkv_time_mix(p: dict, x: jax.Array, state: RWKVLayerState,
     def lerp(i):
         return x * mix[i] + x_prev * (1 - mix[i])
     xr, xk, xv, xw, xg = (lerp(i) for i in range(5))
-    r = (xr @ p["wr"].astype(dt)).reshape(b, s, h, head_dim)
-    k = (xk @ p["wk"].astype(dt)).reshape(b, s, h, head_dim)
-    v = (xv @ p["wv"].astype(dt)).reshape(b, s, h, head_dim)
-    g = jax.nn.silu(xg @ p["wg"].astype(dt))
+    # layers.linear: dense or the W4A8 pair — wk/wv/wo are quantized under
+    # +w4a8 serving (QUANT_KEYS), wr/wg fall through dense
+    r = linear(p, "wr", xr).astype(dt).reshape(b, s, h, head_dim)
+    k = linear(p, "wk", xk).astype(dt).reshape(b, s, h, head_dim)
+    v = linear(p, "wv", xv).astype(dt).reshape(b, s, h, head_dim)
+    g = jax.nn.silu(linear(p, "wg", xg).astype(dt))
     w = _decay(p, xw).reshape(b, s, h, head_dim)              # f32
     if n_valid is not None:
         valid = (jnp.arange(s) < n_valid)[None, :, None, None]
@@ -129,7 +131,7 @@ def rwkv_time_mix(p: dict, x: jax.Array, state: RWKVLayerState,
                                      state.wkv.astype(jnp.float32))
     y = ys.reshape(b, s, d).astype(dt)
     y = rms_norm(y, p["ln_x"]) * g
-    y = y @ p["wo"].astype(dt)
+    y = linear(p, "wo", y).astype(dt)
     x_last = (x[:, -1, :] if n_valid is None else
               jax.lax.dynamic_slice_in_dim(x, n_valid - 1, 1, axis=1)[:, 0])
     new_state = RWKVLayerState(x_prev_att=x_last, x_prev_ffn=state.x_prev_ffn,
@@ -169,10 +171,10 @@ def rwkv_time_mix_step(p: dict, x_t: jax.Array, state: RWKVLayerState,
     def lerp(i):
         return x_t * mix[i] + xp * (1 - mix[i])
     xr, xk, xv, xw, xg = (lerp(i) for i in range(5))
-    r = (xr @ p["wr"].astype(dt)).reshape(b, h, head_dim).astype(jnp.float32)
-    k = (xk @ p["wk"].astype(dt)).reshape(b, h, head_dim).astype(jnp.float32)
-    v = (xv @ p["wv"].astype(dt)).reshape(b, h, head_dim).astype(jnp.float32)
-    g = jax.nn.silu(xg @ p["wg"].astype(dt))
+    r = linear(p, "wr", xr).astype(jnp.float32).reshape(b, h, head_dim)
+    k = linear(p, "wk", xk).astype(jnp.float32).reshape(b, h, head_dim)
+    v = linear(p, "wv", xv).astype(jnp.float32).reshape(b, h, head_dim)
+    g = jax.nn.silu(linear(p, "wg", xg).astype(dt))
     w = _decay(p, xw).reshape(b, h, head_dim)
     s_new, y = jax.vmap(jax.vmap(_wkv_step))(
         state.wkv, r, k, v, w, jnp.broadcast_to(p["u"].astype(jnp.float32),
@@ -183,8 +185,8 @@ def rwkv_time_mix_step(p: dict, x_t: jax.Array, state: RWKVLayerState,
     if active is not None:
         att_new = jnp.where(active[:, None], att_new, state.x_prev_att)
         wkv_new = jnp.where(active[:, None, None, None], wkv_new, state.wkv)
-    return y @ p["wo"].astype(dt), state._replace(x_prev_att=att_new,
-                                                  wkv=wkv_new)
+    return linear(p, "wo", y).astype(dt), state._replace(x_prev_att=att_new,
+                                                         wkv=wkv_new)
 
 
 def rwkv_channel_mix_step(p: dict, x_t: jax.Array, state: RWKVLayerState,

@@ -21,6 +21,7 @@ import jax.numpy as jnp
 
 from repro.core import attention as attn_lib
 from repro.core import rope as rope_lib
+from repro.core.quantization import quantize_kv
 from .config import ModelConfig
 from .layers import (batch_vocab_constrain, dense_init, embed_init, linear,
                      mlp_apply, mlp_init, rms_norm)
@@ -402,10 +403,29 @@ class TransformerLM:
     def init_cache(self, batch: int, max_len: int,
                    source_len: int | None = None, *,
                    n_sources: int | None = None,
-                   chunk: int | None = None) -> Cache:
+                   chunk: int | None = None,
+                   kv_dtype=None) -> Cache:
         """Preallocated decode state. KV tensors [L, B, Smax, Hkv, Dh] in the
-        compute dtype; per-row lengths; incremental-RoPE angle state (Eq. 11);
-        family-specific recurrent states.
+        KV storage dtype; per-row lengths; incremental-RoPE angle state
+        (Eq. 11); family-specific recurrent states.
+
+        ``kv_dtype``: storage dtype for the self-attention KV cache.
+        Defaults to ``int8`` for ``+w4a8`` configs (``cfg.w4a8_serve``),
+        else the compute dtype — the old behavior *assumed* compute dtype
+        everywhere, which is exactly the latent coupling this parameter
+        removes. An int8 cache additionally allocates per-(layer, slot,
+        head, position) **bf16** dequant scales ``k_scale/v_scale
+        [L, B, Hkv, Smax]`` (position last: it is the blocked axis every
+        consumer tiles over) plus pooled-source twins
+        ``src_k_scale/src_v_scale [Lc, E, Hkv, S_src]`` when a source-KV
+        pool exists. Scales are computed in f32 and stored bf16 — the
+        per-Dh-element overhead halves to 2 bytes, so the int8 footprint
+        is ``0.25 + 0.5/Dh`` of fp32 (vs ``0.25 + 1/Dh`` with f32
+        scales, which overshoots the 0.3x budget at small head dims);
+        consumers dequantize in f32, promotion covers the mixed multiply. Per-row lock-step ``cross_k/cross_v`` stay in the
+        compute dtype: they are written once per ``prefill`` batch and
+        carry no per-slot lifecycle, so quantizing them buys nothing the
+        pool form doesn't already cover.
 
         Cross-attention source KV comes in two forms. ``source_len`` alone
         (lock-step serving) allocates per-row ``cross_k/cross_v``
@@ -460,8 +480,15 @@ class TransformerLM:
             # of silently paying a per-step whole-cache pad+copy
             mult = 128 if kv_len > 128 else 8
             kv_len = -(-kv_len // mult) * mult
-        cache["k"] = jnp.zeros((n_self, batch, kv_len, cfg.n_kv_heads, dh), dt)
+        kv_dt = (jnp.dtype(kv_dtype) if kv_dtype is not None
+                 else (jnp.dtype(jnp.int8) if cfg.w4a8_serve else dt))
+        cache["k"] = jnp.zeros((n_self, batch, kv_len, cfg.n_kv_heads, dh),
+                               kv_dt)
         cache["v"] = jnp.zeros_like(cache["k"])
+        if kv_dt == jnp.int8:
+            cache["k_scale"] = jnp.zeros(
+                (n_self, batch, cfg.n_kv_heads, kv_len), jnp.bfloat16)
+            cache["v_scale"] = jnp.zeros_like(cache["k_scale"])
         if cfg.rotary_dim:
             rs = rope_lib.rope_state_init(dh, cfg.rope_base, 0, cfg.rotary_dim)
             cache["rope_cos"] = jnp.broadcast_to(rs.cos_m, (batch, rs.cos_m.shape[0]))
@@ -478,10 +505,16 @@ class TransformerLM:
             # pooled source KV (continuous serving): entries keyed by source
             # id on the host side, shared read-only across slots
             cache["src_k"] = jnp.zeros(
-                (n_cross_kv, n_sources, source_len, cfg.n_kv_heads, dh), dt)
+                (n_cross_kv, n_sources, source_len, cfg.n_kv_heads, dh),
+                kv_dt)
             cache["src_v"] = jnp.zeros_like(cache["src_k"])
             cache["src_len"] = jnp.zeros((n_sources,), jnp.int32)
             cache["src_index"] = jnp.zeros((batch,), jnp.int32)
+            if kv_dt == jnp.int8:
+                cache["src_k_scale"] = jnp.zeros(
+                    (n_cross_kv, n_sources, cfg.n_kv_heads, source_len),
+                    jnp.bfloat16)
+                cache["src_v_scale"] = jnp.zeros_like(cache["src_k_scale"])
         elif n_cross_kv and source_len:
             cache["cross_k"] = jnp.zeros(
                 (n_cross_kv, batch, source_len, cfg.n_kv_heads, dh), dt)
@@ -554,9 +587,36 @@ class TransformerLM:
         vc = jax.vmap(upd_masked)(vc, v, lengths, active)
         return kc, vc
 
+    @staticmethod
+    def _write_kv_scales(ksc: jax.Array, vsc: jax.Array, ks: jax.Array,
+                         vs: jax.Array, lengths: jax.Array,
+                         active: jax.Array | None = None):
+        """Scale twin of :meth:`_write_kv` for the int8 cache: ksc/vsc
+        [B, Hkv, Smax] bf16 scale planes; ks/vs [B, Hkv] per-head scales of
+        the new token, written at ``lengths % Smax`` on the position axis
+        with the **same** parking semantics (``active=None`` writes
+        unconditionally — full caches park on the reserved tail row whose
+        write target already encodes the parking; ``active`` is the ring
+        per-slot rewrite-in-place mask)."""
+        ks = ks.astype(ksc.dtype)
+        vs = vs.astype(vsc.dtype)
+        r = ksc.shape[-1]
+        if active is None:
+            def upd(c, x, l):
+                return jax.lax.dynamic_update_slice(c, x[:, None], (0, l % r))
+            return jax.vmap(upd)(ksc, ks, lengths), \
+                jax.vmap(upd)(vsc, vs, lengths)
+
+        def upd_masked(c, x, l, a):
+            old = jax.lax.dynamic_slice(c, (0, l % r), (c.shape[0], 1))
+            return jax.lax.dynamic_update_slice(
+                c, jnp.where(a, x[:, None], old), (0, l % r))
+        return jax.vmap(upd_masked)(ksc, ks, lengths, active), \
+            jax.vmap(upd_masked)(vsc, vs, lengths, active)
+
     def _decode_self_attn(self, p: Params, h: jax.Array, kc, vc,
-                          cache: Cache, active: jax.Array | None = None
-                          ) -> tuple[jax.Array, jax.Array, jax.Array]:
+                          cache: Cache, active: jax.Array | None = None,
+                          ksc=None, vsc=None):
         cfg = self.cfg
         b, d = h.shape
         dh = cfg.resolved_head_dim
@@ -586,13 +646,22 @@ class TransformerLM:
             # membership changes (serving/slot_pool.py reserves the tail)
             write_at = jnp.where(active, cache["len"], kc.shape[1] - 1)
             attn_len = jnp.where(active, cache["len"] + 1, 1)
+        if ksc is not None:
+            # int8 cache: quantize the new token's K/V over Dh per head —
+            # the write parks/wraps exactly like the fp path, and the scale
+            # plane parks with it so released rows stay (0, scale 0)
+            k, k_s = quantize_kv(k)
+            v, v_s = quantize_kv(v)
+            ksc, vsc = self._write_kv_scales(ksc, vsc, k_s, v_s,
+                                             write_at, write_mask)
         kc, vc = self._write_kv(kc, vc, k.astype(kc.dtype), v.astype(vc.dtype),
                                 write_at, write_mask)
         out = attn_lib.decode_attention(q, kc, vc, attn_len,
                                         impl=cfg.decode_impl,
                                         window=cfg.window, ring=ring,
-                                        block_size=cfg.attn_block or 512)
-        return linear(p, "wo", out.reshape(b, -1)), kc, vc
+                                        block_size=cfg.attn_block or 512,
+                                        k_scale=ksc, v_scale=vsc)
+        return linear(p, "wo", out.reshape(b, -1)), kc, vc, ksc, vsc
 
     def _decode_cross_attn(self, p: Params, h: jax.Array, ck, cv,
                            source_len: jax.Array) -> jax.Array:
@@ -613,8 +682,8 @@ class TransformerLM:
         return jnp.tanh(p["gate"]).astype(h.dtype) * out
 
     def _decode_cross_attn_pooled(self, p: Params, h: jax.Array, sk, sv,
-                                  entries: jax.Array,
-                                  src_len: jax.Array) -> jax.Array:
+                                  entries: jax.Array, src_len: jax.Array,
+                                  sk_sc=None, sv_sc=None) -> jax.Array:
         """Pooled (continuous-serving) cross read: sk/sv are one layer's
         slice of the source-KV pool, ``[n_entries, S_src, Hkv, Dh]`` —
         shared across slots, NOT batched — and ``entries``/``src_len`` map
@@ -632,7 +701,7 @@ class TransformerLM:
         impl = ("naive" if cfg.decode_impl == "naive" else "blockwise")
         out = attn_lib.decode_cross_attention(
             q, sk, sv, entries, jnp.take(src_len, entries), impl=impl,
-            block_size=cfg.attn_block or 512)
+            block_size=cfg.attn_block or 512, k_scale=sk_sc, v_scale=sv_sc)
         out = linear(p, "wo", out.reshape(b, -1))
         return jnp.tanh(p["gate"]).astype(h.dtype) * out
 
@@ -644,8 +713,11 @@ class TransformerLM:
         cfg = self.cfg
         new = {}
         h = rms_norm(x, bp["ln1"], cfg.norm_eps)
-        attn_out, new["k"], new["v"] = self._decode_self_attn(
-            bp["attn"], h, slices["k"], slices["v"], cache, active)
+        attn_out, new["k"], new["v"], ksc, vsc = self._decode_self_attn(
+            bp["attn"], h, slices["k"], slices["v"], cache, active,
+            slices.get("k_scale"), slices.get("v_scale"))
+        if ksc is not None:
+            new["k_scale"], new["v_scale"] = ksc, vsc
         if cfg.family == "hybrid":
             st = mamba_lib.MambaState(conv=slices["mamba_conv"],
                                       ssm=slices["mamba_ssm"])
@@ -664,7 +736,8 @@ class TransformerLM:
             hc = rms_norm(x, bp["ln_cross"], cfg.norm_eps)
             x = x + self._decode_cross_attn_pooled(
                 bp["cross"], hc, slices["src_k"], slices["src_v"],
-                cache["src_index"], cache["src_len"])
+                cache["src_index"], cache["src_len"],
+                slices.get("src_k_scale"), slices.get("src_v_scale"))
         elif "cross" in bp and "cross_k" in slices:
             hc = rms_norm(x, bp["ln_cross"], cfg.norm_eps)
             x = x + self._decode_cross_attn(bp["cross"], hc, slices["cross_k"],
@@ -722,6 +795,9 @@ class TransformerLM:
             return x, new
 
         self_slices = {"k": cache["k"], "v": cache["v"]}
+        if "k_scale" in cache:
+            self_slices["k_scale"] = cache["k_scale"]
+            self_slices["v_scale"] = cache["v_scale"]
         if cfg.family == "hybrid":
             self_slices["mamba_conv"] = cache["mamba_conv"]
             self_slices["mamba_ssm"] = cache["mamba_ssm"]
@@ -729,6 +805,9 @@ class TransformerLM:
             if "src_k" in cache:                       # pooled source KV
                 self_slices["src_k"] = cache["src_k"]
                 self_slices["src_v"] = cache["src_v"]
+                if "src_k_scale" in cache:
+                    self_slices["src_k_scale"] = cache["src_k_scale"]
+                    self_slices["src_v_scale"] = cache["src_v_scale"]
             elif "cross_k" in cache:                   # per-row (lock-step)
                 self_slices["cross_k"] = cache["cross_k"]
                 self_slices["cross_v"] = cache["cross_v"]
@@ -742,6 +821,8 @@ class TransformerLM:
             n_self_per = group - 1
             if "src_k" in cache:
                 cross_xs, cross_mode = (cache["src_k"], cache["src_v"]), "pooled"
+                if "src_k_scale" in cache:
+                    cross_xs += (cache["src_k_scale"], cache["src_v_scale"])
             elif "cross_k" in cache:
                 cross_xs, cross_mode = (cache["cross_k"], cache["cross_v"]), "perrow"
             else:
@@ -756,7 +837,8 @@ class TransformerLM:
                 if cross_mode == "pooled":
                     x = x + self._decode_cross_attn_pooled(
                         cp["cross"], h, ckv[0], ckv[1],
-                        cache["src_index"], cache["src_len"])
+                        cache["src_index"], cache["src_len"],
+                        *(ckv[2:4] if len(ckv) > 2 else (None, None)))
                 elif cross_mode == "perrow":
                     x = x + self._decode_cross_attn(cp["cross"], h, ckv[0],
                                                     ckv[1],
@@ -778,7 +860,8 @@ class TransformerLM:
                 lambda a: a.reshape(n_cross * n_self_per, *a.shape[2:]), new)
 
         cache = dict(cache)
-        for key in ("k", "v", "mamba_conv", "mamba_ssm"):
+        for key in ("k", "v", "k_scale", "v_scale",
+                    "mamba_conv", "mamba_ssm"):
             if key in new:
                 cache[key] = new[key]
         cache["len"] = cache["len"] + (1 if active is None
@@ -925,6 +1008,20 @@ class TransformerLM:
             return ck.at[:, slots[order]].set(
                 kv[:, kv.shape[1] - m:][:, order].astype(ck.dtype))
 
+        def fill_scale(csc, sc):
+            # scale twin of fill_kv: csc [B, Hkv, R] (position last), sc
+            # [B, Sp, Hkv] from quantize_kv — same contiguous-or-ring write
+            sc = jnp.swapaxes(sc, 1, 2).astype(csc.dtype)  # [B, Hkv, Sp]
+            r = csc.shape[-1]
+            if sc.shape[-1] <= r:
+                return jax.lax.dynamic_update_slice(csc, sc, (0, 0, 0))
+            import numpy as _np
+            pos = _np.arange(sc.shape[-1] - r, sc.shape[-1])
+            slots = pos % r
+            order = _np.argsort(slots)
+            return csc.at[:, :, slots[order]].set(
+                sc[:, :, sc.shape[-1] - r:][:, :, order])
+
         def self_step(x, xs):
             bp, slices = xs
             new = {}
@@ -938,8 +1035,19 @@ class TransformerLM:
                     jnp.swapaxes(q, 1, 2), positions, cfg.rope_base,
                     cfg.rotary_dim), 1, 2)
             k, v = kv_for(bp["attn"], h, with_rope=True)
-            new["k"] = fill_kv(slices["k"], k)
-            new["v"] = fill_kv(slices["v"], v)
+            if "k_scale" in slices:
+                # int8 cache: the cache write quantizes; attention below
+                # still consumes the fresh fp K/V, so full-prefill logits
+                # are untouched by the storage format
+                kq, k_s = quantize_kv(k)
+                vq, v_s = quantize_kv(v)
+                new["k"] = fill_kv(slices["k"], kq)
+                new["v"] = fill_kv(slices["v"], vq)
+                new["k_scale"] = fill_scale(slices["k_scale"], k_s)
+                new["v_scale"] = fill_scale(slices["v_scale"], v_s)
+            else:
+                new["k"] = fill_kv(slices["k"], k)
+                new["v"] = fill_kv(slices["v"], v)
             attn = attn_lib.prefill_attention(q, k, v, causal=True,
                                               window=cfg.window,
                                               kv_block=cfg.attn_block or 512)
@@ -971,6 +1079,9 @@ class TransformerLM:
             return x + y, new
 
         self_slices = {"k": cache["k"], "v": cache["v"]}
+        if "k_scale" in cache:
+            self_slices["k_scale"] = cache["k_scale"]
+            self_slices["v_scale"] = cache["v_scale"]
         if cfg.family == "hybrid":
             self_slices["mamba_conv"] = cache["mamba_conv"]
             self_slices["mamba_ssm"] = cache["mamba_ssm"]
@@ -1135,10 +1246,13 @@ class TransformerLM:
             src_n = jnp.reshape(jnp.take(cache["src_len"], entry),
                                 (1,)).astype(jnp.int32)
 
-        def cross_read(cp, hc, sk_all, sv_all):
+        def cross_read(cp, hc, sk_all, sv_all, sks_all=None, svs_all=None):
             """Chunk queries (pre-normed ``hc`` [1, C, d]) against this
             slot's pool entry in one layer's source KV ([E, S_src, Hkv,
-            Dh]) — read-only, masked to the entry's valid prefix."""
+            Dh]) — read-only, masked to the entry's valid prefix. An int8
+            pool (``sks_all/svs_all`` [E, Hkv, S_src] scales) dequantizes
+            just this entry's slice — one [S_src, Hkv, Dh] f32
+            materialization per layer per chunk, not the whole pool."""
             qc = linear(cp, "wq", hc).reshape(1, c, cfg.n_heads, dh)
             if cfg.qk_norm:
                 qc = rms_norm(qc, cp["qn"], cfg.norm_eps)
@@ -1146,6 +1260,13 @@ class TransformerLM:
                                        (1, s_src, hkv, dh))
             sv = jax.lax.dynamic_slice(sv_all, (entry, 0, 0, 0),
                                        (1, s_src, hkv, dh))
+            if sks_all is not None:
+                sks = jax.lax.dynamic_slice(sks_all, (entry, 0, 0),
+                                            (1, hkv, s_src))
+                svs = jax.lax.dynamic_slice(svs_all, (entry, 0, 0),
+                                            (1, hkv, s_src))
+                sk = sk.astype(jnp.float32) * jnp.swapaxes(sks, 1, 2)[..., None]
+                sv = sv.astype(jnp.float32) * jnp.swapaxes(svs, 1, 2)[..., None]
             out = attn_lib.prefill_attention(qc, sk, sv, causal=False,
                                              kv_lengths=src_n,
                                              kv_block=cfg.attn_block or 512)
@@ -1158,6 +1279,23 @@ class TransformerLM:
             ap = bp["attn"]
             h = rms_norm(x, bp["ln1"], cfg.norm_eps)
             q, k, v = self._qkv_rope(ap, h, positions)
+            quant = "k_scale" in slices
+            if quant:
+                # int8 cache: chunk K/V quantize per (position, head); the
+                # chunk then attends *through the cache slot* (unlike full
+                # prefill), so the slot reads below dequantize whole-row.
+                # The current chunk's own positions are overlaid with their
+                # fresh fp values — quantization noise enters a chunk's
+                # attention only through the *already-written* prefix, the
+                # part that is genuinely stored int8 at read time. This is
+                # what keeps single-chunk prompts bit-identical to the
+                # lock-step quantized prefill (which attends fp K/V
+                # throughout) and the measured agreement tier tight.
+                k_fp, v_fp = k, v
+                k, k_s = quantize_kv(k)                  # k_s [1, C, Hkv]
+                v, v_s = quantize_kv(v)
+                k_s = k_s.astype(slices["k_scale"].dtype)
+                v_s = v_s.astype(slices["v_scale"].dtype)
             if ring:
                 # ring fill: chunk token at absolute position p lands in
                 # ring slot p % R (wrap-aware scatter); padded tail rows
@@ -1177,8 +1315,38 @@ class TransformerLM:
                                                   (slot, 0, 0, 0))
                 vc = jax.lax.dynamic_update_slice(slices["v"], v_slot,
                                                   (slot, 0, 0, 0))
+                k_att, v_att = k_slot, v_slot
+                if quant:
+                    # same keep-masked ring scatter on the scale planes,
+                    # position-major for the gather then back to [1, Hkv, R]
+                    keep_s = (jnp.arange(c) <= last)[:, None]
+                    ks_t = jnp.swapaxes(jax.lax.dynamic_slice(
+                        slices["k_scale"], (slot, 0, 0),
+                        (1, hkv, smax))[0], 0, 1)        # [R, Hkv]
+                    vs_t = jnp.swapaxes(jax.lax.dynamic_slice(
+                        slices["v_scale"], (slot, 0, 0),
+                        (1, hkv, smax))[0], 0, 1)
+                    ks_t = ks_t.at[idx].set(
+                        jnp.where(keep_s, k_s[0], ks_t[idx]))
+                    vs_t = vs_t.at[idx].set(
+                        jnp.where(keep_s, v_s[0], vs_t[idx]))
+                    new["k_scale"] = jax.lax.dynamic_update_slice(
+                        slices["k_scale"], jnp.swapaxes(ks_t, 0, 1)[None],
+                        (slot, 0, 0))
+                    new["v_scale"] = jax.lax.dynamic_update_slice(
+                        slices["v_scale"], jnp.swapaxes(vs_t, 0, 1)[None],
+                        (slot, 0, 0))
+                    k_att = k_slot.astype(jnp.float32) * ks_t[None, :, :, None]
+                    v_att = v_slot.astype(jnp.float32) * vs_t[None, :, :, None]
+                    # fresh-fp overlay of the current chunk's ring slots
+                    k_att = k_att.at[0, idx].set(
+                        jnp.where(keep, k_fp[0].astype(jnp.float32),
+                                  k_att[0, idx]))
+                    v_att = v_att.at[0, idx].set(
+                        jnp.where(keep, v_fp[0].astype(jnp.float32),
+                                  v_att[0, idx]))
                 attn = attn_lib.prefill_attention_ring(
-                    q, k_slot, v_slot, positions, offset + last,
+                    q, k_att, v_att, positions, offset + last,
                     window=cfg.window)
             else:
                 kc = jax.lax.dynamic_update_slice(
@@ -1191,6 +1359,26 @@ class TransformerLM:
                                                (1, smax, hkv, dh))
                 v_slot = jax.lax.dynamic_slice(vc, (slot, 0, 0, 0),
                                                (1, smax, hkv, dh))
+                if quant:
+                    new["k_scale"] = jax.lax.dynamic_update_slice(
+                        slices["k_scale"], jnp.swapaxes(k_s, 1, 2),
+                        (slot, 0, offset))
+                    new["v_scale"] = jax.lax.dynamic_update_slice(
+                        slices["v_scale"], jnp.swapaxes(v_s, 1, 2),
+                        (slot, 0, offset))
+                    ks_slot = jax.lax.dynamic_slice(
+                        new["k_scale"], (slot, 0, 0), (1, hkv, smax))
+                    vs_slot = jax.lax.dynamic_slice(
+                        new["v_scale"], (slot, 0, 0), (1, hkv, smax))
+                    k_slot = (k_slot.astype(jnp.float32)
+                              * jnp.swapaxes(ks_slot, 1, 2)[..., None])
+                    v_slot = (v_slot.astype(jnp.float32)
+                              * jnp.swapaxes(vs_slot, 1, 2)[..., None])
+                    # fresh-fp overlay of the current chunk's positions
+                    k_slot = jax.lax.dynamic_update_slice(
+                        k_slot, k_fp.astype(jnp.float32), (0, offset, 0, 0))
+                    v_slot = jax.lax.dynamic_update_slice(
+                        v_slot, v_fp.astype(jnp.float32), (0, offset, 0, 0))
                 attn = attn_lib.prefill_attention(
                     q, k_slot, v_slot, causal=True, window=cfg.window,
                     kv_lengths=kv_len, q_offset=q_off,
@@ -1222,7 +1410,9 @@ class TransformerLM:
             if "cross" in bp and "src_k" in slices:   # whisper-style in-layer
                 hc = rms_norm(x, bp["ln_cross"], cfg.norm_eps)
                 x = x + cross_read(bp["cross"], hc, slices["src_k"],
-                                   slices["src_v"])
+                                   slices["src_v"],
+                                   slices.get("src_k_scale"),
+                                   slices.get("src_v_scale"))
             h2 = rms_norm(x, bp["ln2"], cfg.norm_eps)
             if cfg.n_experts:
                 # capacity = chunk length C: each token assigns an expert at
@@ -1239,12 +1429,18 @@ class TransformerLM:
             return x + y, new
 
         self_slices = {"k": cache["k"], "v": cache["v"]}
+        if "k_scale" in cache:
+            self_slices["k_scale"] = cache["k_scale"]
+            self_slices["v_scale"] = cache["v_scale"]
         if cfg.family == "hybrid":
             self_slices["mamba_conv"] = cache["mamba_conv"]
             self_slices["mamba_ssm"] = cache["mamba_ssm"]
         if cfg.cross_attn_every == 1 and pooled_src:   # whisper-style
             self_slices["src_k"] = cache["src_k"]
             self_slices["src_v"] = cache["src_v"]
+            if "src_k_scale" in cache:
+                self_slices["src_k_scale"] = cache["src_k_scale"]
+                self_slices["src_v_scale"] = cache["src_v_scale"]
 
         n_cross = self._n_cross_groups()
         if not n_cross:
@@ -1255,6 +1451,8 @@ class TransformerLM:
             n_self_per = group - 1
             cross_xs = ((cache["src_k"], cache["src_v"]) if pooled_src
                         else ())
+            if pooled_src and "src_k_scale" in cache:
+                cross_xs += (cache["src_k_scale"], cache["src_v_scale"])
 
             def group_step(x, xs):
                 gp, gs, cp, *skv = xs
@@ -1262,7 +1460,9 @@ class TransformerLM:
                                     unroll=cfg.unroll_layers)
                 if pooled_src:
                     hc = rms_norm(x, cp["ln1"], cfg.norm_eps)
-                    x = x + cross_read(cp["cross"], hc, skv[0], skv[1])
+                    x = x + cross_read(cp["cross"], hc, skv[0], skv[1],
+                                       *(skv[2:4] if len(skv) > 2
+                                         else (None, None)))
                 h2 = rms_norm(x, cp["ln2"], cfg.norm_eps)
                 x = x + mlp_apply(cp["ffn"], h2, cfg.act, cfg.gated_mlp)
                 return x, new
@@ -1403,9 +1603,26 @@ class TransformerLM:
 
         ks, vs = jax.vmap(proj)(stacked)                     # [Lc, S, Hkv, Dh]
         keep = (jnp.arange(ks.shape[1]) < length)[None, :, None, None]
-        ks = jnp.where(keep, ks, 0).astype(cache["src_k"].dtype)
-        vs = jnp.where(keep, vs, 0).astype(cache["src_v"].dtype)
+        ks = jnp.where(keep, ks, 0)
+        vs = jnp.where(keep, vs, 0)
         cache = dict(cache)
+        if "src_k_scale" in cache:
+            # int8 pool: quantize after the tail zeroing so padded rows get
+            # (0, scale 0) — the entry's device state stays inspectably zero
+            ks, k_s = quantize_kv(ks)                    # k_s [Lc, S, Hkv]
+            vs, v_s = quantize_kv(vs)
+            cache["src_k_scale"] = jax.lax.dynamic_update_slice(
+                cache["src_k_scale"],
+                jnp.swapaxes(k_s, 1, 2)[:, None].astype(
+                    cache["src_k_scale"].dtype),
+                (0, entry, 0, 0))
+            cache["src_v_scale"] = jax.lax.dynamic_update_slice(
+                cache["src_v_scale"],
+                jnp.swapaxes(v_s, 1, 2)[:, None].astype(
+                    cache["src_v_scale"].dtype),
+                (0, entry, 0, 0))
+        ks = ks.astype(cache["src_k"].dtype)
+        vs = vs.astype(cache["src_v"].dtype)
         cache["src_k"] = jax.lax.dynamic_update_slice(
             cache["src_k"], ks[:, None], (0, entry, 0, 0, 0))
         cache["src_v"] = jax.lax.dynamic_update_slice(
@@ -1433,6 +1650,9 @@ class TransformerLM:
         cache["src_k"] = cache["src_k"].at[:, entry].set(0)
         cache["src_v"] = cache["src_v"].at[:, entry].set(0)
         cache["src_len"] = cache["src_len"].at[entry].set(0)
+        for key in ("src_k_scale", "src_v_scale"):
+            if key in cache:
+                cache[key] = cache[key].at[:, entry].set(0)
         return cache
 
     def finalize_slot(self, cache: Cache, slot: jax.Array,
@@ -1469,8 +1689,12 @@ class TransformerLM:
                     "mamba_conv", "mamba_ssm"):
             if key in cache:
                 cache[key] = cache[key].at[:, slot].set(0)
-        if self.cfg.kv_ring and self.cfg.window:
-            for key in ("k", "v"):
+        if (self.cfg.kv_ring and self.cfg.window) or "k_scale" in cache:
+            # ring caches zero for the uniform-reset contract; int8 caches
+            # additionally zero so a released slot's (rows, scales) pair is
+            # all-zeros — scale 0 means a stale row can never dequantize to
+            # a previous occupant's value even if misread
+            for key in ("k", "v", "k_scale", "v_scale"):
                 if key in cache:
                     cache[key] = cache[key].at[:, slot].set(0)
         return cache

@@ -61,10 +61,12 @@ class WhisperModel:
     def init_cache(self, batch: int, max_len: int,
                    source_len: int | None = None, *,
                    n_sources: int | None = None,
-                   chunk: int | None = None) -> Cache:
+                   chunk: int | None = None,
+                   kv_dtype=None) -> Cache:
         return self.decoder.init_cache(batch, max_len,
                                        source_len or self.cfg.source_len,
-                                       n_sources=n_sources, chunk=chunk)
+                                       n_sources=n_sources, chunk=chunk,
+                                       kv_dtype=kv_dtype)
 
     def prefill(self, params: Params, tokens: jax.Array, cache: Cache,
                 source: jax.Array | None = None,

@@ -149,6 +149,14 @@ class ContinuousBatchingEngine:
                              f"({max_len}) so padded chunks stay in range")
         if decode_ticks < 1:
             raise ValueError(f"decode_ticks must be >= 1, got {decode_ticks}")
+        if getattr(model.cfg, "w4a8_serve", False):
+            # +w4a8 config: one-shot W4 weight quantization at engine
+            # construction. Deterministic (no RNG), so the seeded-sampling
+            # replay contract survives unchanged; the int8 KV side rides on
+            # init_cache's dtype default below. The fp32 host loop is
+            # untouched — quantization is entirely a params/cache property.
+            from repro.models.quantized import quantize_params
+            params = quantize_params(params)
         self.model, self.params = model, params
         self.chunk, self.eos_id, self.pad_id = chunk, eos_id, pad_id
         self.temperature = temperature
@@ -255,7 +263,8 @@ class ContinuousBatchingEngine:
         # live-KV gauge is sum_over_active(min(len, rows)) * this
         self._kv_rows = (int(self.cache["k"].shape[2])
                          if "k" in self.cache else 0)
-        kv_self = [self.cache[k] for k in ("k", "v") if k in self.cache]
+        kv_self = [self.cache[k] for k in ("k", "v", "k_scale", "v_scale")
+                   if k in self.cache]
         self._kv_row_bytes = (
             sum(int(a.size) * a.dtype.itemsize for a in kv_self)
             // (n_slots * self._kv_rows) if self._kv_rows else 0)
@@ -1005,8 +1014,13 @@ class ContinuousBatchingEngine:
         # not an inference from shapes; recurrent-state families carry no
         # KV rows and report 0. Pooled source KV (src_k / src_v) counts
         # too — with n_entries == n_slots the per-slot share is exact.
-        kv = [self.cache[k] for k in ("k", "v", "cross_k", "cross_v",
-                                      "src_k", "src_v")
+        # An int8 (+w4a8) cache counts its f32 dequant-scale planes too —
+        # kv_bytes_per_slot reports the true footprint, so the ~4x win the
+        # regression baseline pins is net of scale overhead.
+        kv = [self.cache[k] for k in ("k", "v", "k_scale", "v_scale",
+                                      "cross_k", "cross_v",
+                                      "src_k", "src_v",
+                                      "src_k_scale", "src_v_scale")
               if k in self.cache]
         kv_bytes = sum(int(a.size) * a.dtype.itemsize for a in kv)
         term = (self.sched.retired + self.sched.shed + self.sched.errored)

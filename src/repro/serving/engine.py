@@ -17,6 +17,13 @@ import jax.numpy as jnp
 class ServingEngine:
     def __init__(self, model, params, *, max_len: int, batch: int,
                  source_len: int | None = None):
+        if getattr(model.cfg, "w4a8_serve", False):
+            # +w4a8 config: one-shot weight quantization at engine
+            # construction (deterministic — no RNG — so seeded-sampling
+            # replay invariance is preserved bit-for-bit); the KV side is
+            # handled by init_cache's int8 default for these configs
+            from repro.models.quantized import quantize_params
+            params = quantize_params(params)
         self.model, self.params = model, params
         self.max_len, self.batch = max_len, batch
         self.source_len = source_len

@@ -63,3 +63,42 @@ def test_end_to_end_linear_quality():
     want = x @ w
     rel = float(jnp.linalg.norm(got - want) / jnp.linalg.norm(want))
     assert rel < 0.13, rel
+
+
+# non-dividing block shapes: the wrapper pads K to block_k and N to block_n
+# internally — every (m, k, n) that isn't a multiple of the kernel tiling
+# must still match the unpadded oracle (the serving models' d_ff / head
+# concat dims are rarely tile-multiples at reduced test shapes)
+ODD_SWEEP = [
+    # m,  k,    n,   bm, bn, bk
+    (1, 384, 192, 8, 256, 512),     # k and n both below one block
+    (5, 640, 704, 8, 256, 512),     # neither divides
+    (2, 1280, 320, 8, 128, 256),    # k = 5 blocks, n = 2.5 blocks
+    (7, 896, 130, 8, 128, 512),     # n barely over one block
+    (13, 300, 258, 8, 256, 256),    # k not even a GROUP multiple
+]
+
+
+@pytest.mark.parametrize("m,k,n,bm,bn,bk", ODD_SWEEP)
+def test_kernel_nondividing_blocks_vs_ref(m, k, n, bm, bn, bk):
+    x = jnp.asarray(RNG.standard_normal((m, k)), jnp.float32)
+    w = jnp.asarray(RNG.standard_normal((k, n)) * 0.05, jnp.float32)
+    qw = quantize_w4(w)
+    got = ops.gemv_w4a8(x, qw.packed, qw.scale, block_m=bm, block_n=bn,
+                        block_k=bk, interpret=True)
+    assert got.shape == (m, n)
+    want = ref.gemv_w4a8_ref(x, qw.packed, qw.scale)
+    np.testing.assert_allclose(got, want, atol=1e-5, rtol=1e-5)
+
+
+def test_ref_matches_core_reference_semantics():
+    """kernels/gemv_w4a8.ref and core.quantization.w4a8_matmul_ref are the
+    same semantics — the models' CPU fallback (layers.linear) uses the core
+    one, the kernel tests pin against this one; they must not drift."""
+    from repro.core.quantization import QuantizedLinear, w4a8_matmul_ref
+    x = jnp.asarray(RNG.standard_normal((6, 384)), jnp.float32)
+    w = jnp.asarray(RNG.standard_normal((384, 160)) * 0.05, jnp.float32)
+    qw = quantize_w4(w)
+    a = ref.gemv_w4a8_ref(x, qw.packed, qw.scale)
+    b = w4a8_matmul_ref(x, QuantizedLinear(qw.packed, qw.scale, None))
+    np.testing.assert_allclose(a, b, atol=1e-5, rtol=1e-5)

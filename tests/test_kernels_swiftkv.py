@@ -232,3 +232,147 @@ def test_ring_requires_window():
     with pytest.raises(ValueError, match="window"):
         ops.swiftkv_decode(q, k, v, lengths, ring=True, block_k=128,
                            interpret=True)
+
+
+# ---------------------------------------------------------------------------
+# int8 KV caches (+w4a8 serving): scale-plumbing parity vs the dequant oracle
+# ---------------------------------------------------------------------------
+# The int8 contract is *exact* relative to dequantize-then-attend: the scale
+# multiply rides the block loads, so running the kernel on (int8 rows,
+# scales) must equal running it on the dequantized f32 rows — float-order
+# tolerance only, no quantization-error budget in these assertions.
+
+from repro.core import attention as attn
+from repro.core.quantization import dequantize_kv, quantize_kv
+
+
+def _quant_cache(k):
+    """[B, S, Hkv, D] f32 -> (int8 rows, scales [B, Hkv, S], dequant f32)."""
+    q8, s = quantize_kv(k)                        # scale [B, S, Hkv]
+    sc = jnp.transpose(s, (0, 2, 1))              # position-last plane
+    return q8, sc, dequantize_kv(q8, s)
+
+
+@pytest.mark.parametrize("b,hq,hkv,s,d,blk", SWEEP[:4])
+def test_kernel_int8_vs_dequant_oracle(b, hq, hkv, s, d, blk):
+    q, k, v, lengths = mk(b, hq, hkv, s, d, jnp.float32)
+    k8, ks, kf = _quant_cache(k)
+    v8, vs, vf = _quant_cache(v)
+    got = ops.swiftkv_decode(q, k8, v8, lengths, block_k=blk,
+                             k_scale=ks, v_scale=vs, interpret=True)
+    want = ops.swiftkv_decode(q, kf, vf, lengths, block_k=blk,
+                              interpret=True)
+    np.testing.assert_allclose(got, want, atol=2e-5)
+
+
+def test_blockwise_int8_vs_dequant_oracle():
+    q, k, v, lengths = mk(2, 8, 2, 512, 64, jnp.float32)
+    k8, ks, kf = _quant_cache(k)
+    v8, vs, vf = _quant_cache(v)
+    got = attn.decode_attention(q, k8, v8, lengths, impl="blockwise",
+                                block_size=128, k_scale=ks, v_scale=vs)
+    want = attn.decode_attention(q, kf, vf, lengths, impl="blockwise",
+                                 block_size=128)
+    np.testing.assert_allclose(got, want, atol=2e-5)
+
+
+def test_naive_int8_agrees_with_blockwise_int8():
+    """The dense oracle (dequantize up front) and the streaming scale
+    multiply are the same math in different orders."""
+    q, k, v, lengths = mk(2, 4, 2, 256, 64, jnp.float32)
+    k8, ks, _ = _quant_cache(k)
+    v8, vs, _ = _quant_cache(v)
+    a = attn.decode_attention(q, k8, v8, lengths, impl="naive",
+                              k_scale=ks, v_scale=vs)
+    b_ = attn.decode_attention(q, k8, v8, lengths, impl="blockwise",
+                               block_size=128, k_scale=ks, v_scale=vs)
+    np.testing.assert_allclose(a, b_, atol=2e-5)
+
+
+@pytest.mark.parametrize("wrap_off", [0, 1, 127, 131])
+def test_kernel_int8_ring_wrap(wrap_off):
+    """int8 ring cache at the wrap boundary offsets: the per-slot scale
+    plane rides the same rotated layout as the rows (slot s's scale
+    multiplies slot s's row, wherever its absolute position landed)."""
+    b, hq, hkv, d = 3, 4, 2, 64
+    lengths = np.asarray([2 * RING + wrap_off, RING - 37, 1], np.int32)
+    L = int(lengths.max())
+    kf = np.asarray(RNG.standard_normal((b, L, hkv, d)), np.float32)
+    vf = np.asarray(RNG.standard_normal((b, L, hkv, d)), np.float32)
+    q = jnp.asarray(RNG.standard_normal((b, hq, d)), jnp.float32)
+    kr, vr = _ringify(kf, lengths, RING), _ringify(vf, lengths, RING)
+    k8, ks, krf = _quant_cache(kr)
+    v8, vs, vrf = _quant_cache(vr)
+    got = ops.swiftkv_decode(q, k8, v8, jnp.asarray(lengths), window=RWIN,
+                             ring=True, block_k=128, k_scale=ks, v_scale=vs,
+                             interpret=True)
+    want = ops.swiftkv_decode(q, krf, vrf, jnp.asarray(lengths), window=RWIN,
+                              ring=True, block_k=128, interpret=True)
+    np.testing.assert_allclose(got, want, atol=2e-5)
+
+
+@pytest.mark.parametrize("wrap_off", [0, 1, 127, 131])
+def test_blockwise_int8_ring_wrap(wrap_off):
+    b, hq, hkv, d = 2, 4, 2, 64
+    lengths = np.asarray([2 * RING + wrap_off, RING + 11], np.int32)
+    L = int(lengths.max())
+    kf = np.asarray(RNG.standard_normal((b, L, hkv, d)), np.float32)
+    vf = np.asarray(RNG.standard_normal((b, L, hkv, d)), np.float32)
+    q = jnp.asarray(RNG.standard_normal((b, hq, d)), jnp.float32)
+    kr, vr = _ringify(kf, lengths, RING), _ringify(vf, lengths, RING)
+    k8, ks, krf = _quant_cache(kr)
+    v8, vs, vrf = _quant_cache(vr)
+    got = attn.decode_attention(q, k8, v8, jnp.asarray(lengths),
+                                impl="blockwise", window=RWIN, ring=True,
+                                block_size=128, k_scale=ks, v_scale=vs)
+    want = attn.decode_attention(q, krf, vrf, jnp.asarray(lengths),
+                                 impl="blockwise", window=RWIN, ring=True,
+                                 block_size=128)
+    np.testing.assert_allclose(got, want, atol=2e-5)
+
+
+def test_pooled_int8_heterogeneous_entries():
+    """int8 source-KV pool: slots mapping to different entries with
+    heterogeneous lengths — including a shared entry and a length-0 row —
+    equal the dequantized-pool read exactly."""
+    e, s_src, hkv, hq, d, b = 3, 192, 2, 4, 64, 4
+    kp = np.asarray(RNG.standard_normal((e, s_src, hkv, d)), np.float32)
+    vp = np.asarray(RNG.standard_normal((e, s_src, hkv, d)), np.float32)
+    q = jnp.asarray(RNG.standard_normal((b, hq, d)), jnp.float32)
+    entries = jnp.asarray([0, 2, 0, 1], jnp.int32)     # slots 0/2 share entry 0
+    lengths = jnp.asarray([192, 57, 130, 0], jnp.int32)
+    k8, ks, kf = _quant_cache(jnp.asarray(kp))         # scale [E, Hkv, S]
+    v8, vs, vf = _quant_cache(jnp.asarray(vp))
+    got = attn.decode_cross_attention(q, k8, v8, entries, lengths,
+                                      impl="blockwise", block_size=64,
+                                      k_scale=ks, v_scale=vs)
+    want = attn.decode_cross_attention(q, kf, vf, entries, lengths,
+                                       impl="blockwise", block_size=64)
+    np.testing.assert_allclose(got, want, atol=2e-5)
+    # the no-source row reads an exact zero either way
+    np.testing.assert_array_equal(np.asarray(got)[3], np.zeros((hq, d)))
+
+
+def test_kernel_int8_ring_consumed_zero_copy():
+    """The int8 ring program must stay zero-copy: scales stream blockwise
+    next to the rows — no gather / roll / sort materializing a dequantized
+    or unrotated copy of the cache."""
+    q = jnp.zeros((2, 4, 64), jnp.float32)
+    kr = jnp.zeros((2, RING, 2, 64), jnp.int8)
+    sc = jnp.zeros((2, 2, RING), jnp.float32)
+    lengths = jnp.asarray([2 * RING + 5, 40], jnp.int32)
+    jaxpr = jax.make_jaxpr(
+        lambda q_, k_, s_, l_: ops.swiftkv_decode(
+            q_, k_, k_, l_, window=RWIN, ring=True, block_k=128,
+            k_scale=s_, v_scale=s_, interpret=True))(q, kr, sc, lengths)
+    prims = _flat_primitives(jaxpr.jaxpr, set())
+    assert not prims & {"gather", "roll", "sort", "scatter",
+                        "scatter-add", "rev"}, prims
+
+
+def test_int8_scales_require_both():
+    q, k, v, lengths = mk(1, 4, 2, 256, 64, jnp.float32)
+    sc = jnp.ones((1, 2, 256), jnp.float32)
+    with pytest.raises(ValueError, match="both"):
+        ops.swiftkv_decode(q, k, v, lengths, block_k=128, k_scale=sc,
+                           interpret=True)

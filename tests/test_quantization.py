@@ -1,0 +1,289 @@
+"""Property suite for the W4A8 serving-path quantizers (paper §IV-B).
+
+These are the *measured-tolerance* contracts the +w4a8 serving configs rest
+on: the conformance layer (test_serving_conformance.py) gates the engines on
+agreement/parity thresholds, and this file pins the component-level error
+ceilings that make those thresholds meaningful — int4 group-128 weight
+round-trip, the MSE clip search never losing to plain min-max, nibble
+pack/unpack bijection, and the int8 KV scale law (constant rows exact,
+zero rows stored with scale 0 so a released slot is all-zeros).
+
+Also holds the ``init_cache`` dtype/bytes unit test (the latent fp32
+assumption fixed alongside the +w4a8 axis): reported cache bytes for
+fp32, ring, and int8 caches, and the ``kv_dtype`` override.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:          # optional dep: seeded explicit cases
+    from _hypothesis_compat import given, settings, st
+
+from repro.core.quantization import (GROUP, QuantizedLinear, dequantize_kv,
+                                     dequantize_w4, quantize_a8, quantize_kv,
+                                     quantize_w4, unpack_w4, w4a8_matmul_ref)
+
+# ---------------------------------------------------------------------------
+# int4 weight round-trip
+# ---------------------------------------------------------------------------
+
+# RTN int4 with group-128 scales and MSE clip search sits at ~10.5-11.6%
+# relative error on gaussian weights (the RTN-int4 floor — 16 levels over a
+# bell curve; see quantize_w4's docstring) essentially independent of shape.
+# 12.5% is the measured ceiling with margin; min-max-only scaling sits ~12%,
+# which the clip-search-dominance test below keeps strictly at or above us.
+W4_GROUP128_CEILING = 0.125
+
+
+def _rel_err(got, want):
+    return float(np.linalg.norm(got - want) / (np.linalg.norm(want) + 1e-12))
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(min_value=2, max_value=8),
+       st.integers(min_value=1, max_value=64),
+       st.integers(min_value=0, max_value=2 ** 31 - 1))
+def test_w4_roundtrip_ceiling_group128(k_groups, n_half, seed):
+    """Dequant(quantize_w4(w)) stays within the group-128 error ceiling on
+    gaussian weights, for any K that's a multiple of GROUP and any even N."""
+    k, n = k_groups * GROUP, 2 * n_half
+    w = np.random.default_rng(seed).normal(size=(k, n)).astype(np.float32)
+    qw = quantize_w4(jnp.asarray(w))
+    back = np.asarray(dequantize_w4(qw))
+    assert back.shape == (k, n)
+    assert _rel_err(back, w) < W4_GROUP128_CEILING
+
+
+def test_w4_roundtrip_partial_group_pads():
+    """K not a multiple of GROUP: the trailing partial group is padded for
+    scale computation but the round trip returns the original K rows."""
+    w = np.random.default_rng(0).normal(size=(GROUP + 37, 16)).astype(np.float32)
+    qw = quantize_w4(jnp.asarray(w))
+    back = np.asarray(dequantize_w4(qw))
+    assert back.shape == w.shape
+    # partial-group scales see zero-padding, still bounded well below junk
+    assert _rel_err(back, w) < 2 * W4_GROUP128_CEILING
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=0, max_value=2 ** 31 - 1),
+       st.floats(min_value=0.1, max_value=4.0))
+def test_clip_search_never_worse_than_minmax(seed, sigma):
+    """The per-group MSE clip search must dominate plain min-max scaling
+    (clip factor 1.0 is one of the candidates, so >= is structural — this
+    pins that the search actually compares per (group, out-channel))."""
+    rng = np.random.default_rng(seed)
+    w = (rng.normal(size=(2 * GROUP, 32)) * sigma).astype(np.float32)
+    qw = quantize_w4(jnp.asarray(w))
+    got = _rel_err(np.asarray(dequantize_w4(qw)), w)
+
+    # plain min-max (clip 1.0) reference, same grouping
+    wg = w.reshape(-1, GROUP, w.shape[1])
+    amax = np.abs(wg).max(axis=1)
+    s = np.where(amax > 0, amax / 7.0, 1.0)
+    q = np.clip(np.round(wg / s[:, None, :]), -8, 7)
+    minmax = _rel_err((q * s[:, None, :]).reshape(w.shape), w)
+    assert got <= minmax + 1e-7, (got, minmax)
+
+
+def test_w4_pack_unpack_bijection():
+    """Every int4 value in [-8, 7] survives the nibble pack/unpack in both
+    lane positions (lo and hi)."""
+    vals = np.arange(-8, 8, dtype=np.int8)
+    q = np.stack(np.meshgrid(vals, vals, indexing="ij"), -1).reshape(1, -1)
+    lo = q[:, 0::2].astype(np.uint8) & 0xF
+    hi = (q[:, 1::2].astype(np.uint8) & 0xF) << 4
+    packed = jnp.asarray(lo | hi)
+    assert np.array_equal(np.asarray(unpack_w4(packed)), q)
+
+
+def test_w4_rejects_odd_output_dim():
+    with pytest.raises(AssertionError):
+        quantize_w4(jnp.zeros((GROUP, 7)))
+
+
+def test_w4_zero_weight_group_is_stable():
+    """An all-zero group quantizes to zeros with the safe scale 1.0 — no
+    NaN/inf leaks into the scales."""
+    w = np.zeros((GROUP, 4), np.float32)
+    qw = quantize_w4(jnp.asarray(w))
+    assert np.all(np.isfinite(np.asarray(qw.scale)))
+    assert np.array_equal(np.asarray(dequantize_w4(qw)), w)
+
+
+# ---------------------------------------------------------------------------
+# int8 activations + reference matmul
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=0, max_value=2 ** 31 - 1))
+def test_a8_roundtrip(seed):
+    x = np.random.default_rng(seed).normal(size=(3, 257)).astype(np.float32)
+    q, s = quantize_a8(jnp.asarray(x))
+    back = np.asarray(q, np.float32) * np.asarray(s)
+    assert _rel_err(back, x) < 0.01         # int8: ~0.4% on gaussians
+
+
+def test_a8_zero_row_safe_scale():
+    q, s = quantize_a8(jnp.zeros((2, 64)))
+    assert np.array_equal(np.asarray(q), np.zeros((2, 64)))
+    assert np.all(np.asarray(s) == 1.0)     # activations: safe scale, not 0
+
+
+def test_w4a8_matmul_ref_matches_dequant_oracle():
+    """The int32-accumulate / group-rescale reference equals quantize-both
+    -then-float-matmul exactly (same arithmetic, different order) — this is
+    the semantics the Pallas kernel is pinned against in test_kernels_gemv."""
+    rng = np.random.default_rng(3)
+    x = rng.normal(size=(5, 2 * GROUP)).astype(np.float32)
+    w = rng.normal(size=(2 * GROUP, 48)).astype(np.float32)
+    qw = quantize_w4(jnp.asarray(w))
+    got = np.asarray(w4a8_matmul_ref(jnp.asarray(x), qw))
+    xq, xs = quantize_a8(jnp.asarray(x))
+    oracle = (np.asarray(xq, np.float32) * np.asarray(xs)) \
+        @ np.asarray(dequantize_w4(qw))
+    np.testing.assert_allclose(got, oracle, rtol=1e-5, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# int8 KV cache scale law
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(st.floats(min_value=-100.0, max_value=100.0),
+       st.integers(min_value=1, max_value=256))
+def test_kv_constant_row_roundtrips_exactly(c, dh):
+    """c * ones stores scale |c|/127 and q = ±127 → dequant returns c
+    bit-exactly (the quantize_kv docstring's exactness property)."""
+    x = jnp.full((dh,), np.float32(c))
+    q, s = quantize_kv(x)
+    back = np.asarray(dequantize_kv(q, s))
+    if c == 0.0:
+        assert float(s) == 0.0
+        assert np.array_equal(back, np.zeros(dh))
+    else:
+        assert float(s) == np.float32(abs(np.float32(c))) / np.float32(127.0)
+        np.testing.assert_array_equal(back, np.full(dh, np.float32(c)))
+
+
+def test_kv_zero_row_stores_scale_zero():
+    """Released-slot invariant: zero rows → scale 0 (not the safe 1.0), so
+    zeroing rows AND scale planes leaves no stale device state behind."""
+    q, s = quantize_kv(jnp.zeros((4, 2, 16)))
+    assert np.array_equal(np.asarray(q), np.zeros((4, 2, 16)))
+    assert np.array_equal(np.asarray(s), np.zeros((4, 2)))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=0, max_value=2 ** 31 - 1))
+def test_kv_gaussian_roundtrip(seed):
+    x = np.random.default_rng(seed).normal(size=(6, 64)).astype(np.float32)
+    q, s = quantize_kv(jnp.asarray(x))
+    assert _rel_err(np.asarray(dequantize_kv(q, s)), x) < 0.01
+
+
+# ---------------------------------------------------------------------------
+# quantize_params walk
+# ---------------------------------------------------------------------------
+
+def test_quantize_params_replaces_projections_only():
+    from repro.models.quantized import quantize_params
+    params = {"embed": jnp.ones((16, 8)),
+              "blocks": {"attn": {"wq": jnp.ones((8, 8)),
+                                  "norm": jnp.ones((8,))},
+                         "mlp": {"up": jnp.ones((4, 8, 8))}}}
+    out = quantize_params(params)
+    assert "embed" in out and out["embed"].shape == (16, 8)
+    attn = out["blocks"]["attn"]
+    assert "wq" not in attn and "wq__qp" in attn and "wq__qs" in attn
+    assert "norm" in attn
+    mlp = out["blocks"]["mlp"]
+    assert "up__qp" in mlp and mlp["up__qp"].shape == (4, 8, 4)  # stacked
+
+
+def test_quantize_params_is_deterministic():
+    """No RNG anywhere in the walk — the seeded-replay conformance tests
+    rely on quantize-at-engine-construction being bit-stable."""
+    from repro.models.quantized import quantize_params
+    w = jnp.asarray(np.random.default_rng(0).normal(size=(GROUP, 16))
+                    .astype(np.float32))
+    a = quantize_params({"wq": w})
+    b = quantize_params({"wq": w})
+    assert np.array_equal(np.asarray(a["wq__qp"]), np.asarray(b["wq__qp"]))
+    assert np.array_equal(np.asarray(a["wq__qs"]), np.asarray(b["wq__qs"]))
+
+
+# ---------------------------------------------------------------------------
+# init_cache dtype / reported bytes (the latent fp32 assumption, fixed)
+# ---------------------------------------------------------------------------
+
+def _cache_bytes(cache, keys):
+    return sum(int(np.prod(cache[k].shape)) * cache[k].dtype.itemsize
+               for k in keys if k in cache)
+
+
+def _build(arch):
+    from repro.configs import get_config
+    from repro.models.api import build_model
+    cfg = get_config(arch, reduced=True)
+    return cfg, build_model(cfg)
+
+
+@pytest.mark.parametrize("arch", ["qwen3_8b", "h2o_danube_1p8b+ring"])
+def test_init_cache_fp32_bytes(arch):
+    cfg, model = _build(arch)
+    cache = model.init_cache(2, 128)
+    assert cache["k"].dtype == jnp.dtype(cfg.compute_dtype)
+    assert "k_scale" not in cache
+    want = 2 * np.prod(cache["k"].shape) * cache["k"].dtype.itemsize
+    assert _cache_bytes(cache, ("k", "v", "k_scale", "v_scale")) == want
+
+
+def test_init_cache_int8_default_for_w4a8():
+    cfg, model = _build("qwen3_8b+w4a8")
+    assert cfg.w4a8_serve
+    cache = model.init_cache(2, 128)
+    assert cache["k"].dtype == jnp.int8 and cache["v"].dtype == jnp.int8
+    assert cache["k_scale"].dtype == jnp.bfloat16
+    # one scale per (layer, slot, kv-head, position) — position LAST (the
+    # blocked axis), vs the rows' [L, B, S, Hkv, Dh] layout
+    l, b, s, hkv, _ = cache["k"].shape
+    assert cache["k_scale"].shape == (l, b, hkv, s)
+
+    base_cfg, base_model = _build("qwen3_8b")
+    fp = base_model.init_cache(2, 128)
+    keys = ("k", "v", "k_scale", "v_scale")
+    ratio = _cache_bytes(cache, keys) / _cache_bytes(fp, keys)
+    # int8 rows + bf16 scale per Dh-row: 1/4 + 2/(4*Dh) of fp32 — stays
+    # under the 0.3x budget even at the reduced configs' Dh = 16
+    dh = cache["k"].shape[-1]
+    assert ratio == pytest.approx(0.25 + 0.5 / dh, rel=1e-6)
+    assert ratio <= 0.3
+
+
+def test_init_cache_kv_dtype_override():
+    """kv_dtype overrides the config-derived default in both directions:
+    int8 on a base config allocates scale planes; an explicit float dtype
+    on a +w4a8 config suppresses them."""
+    _, base = _build("qwen3_8b")
+    c8 = base.init_cache(1, 64, kv_dtype=jnp.int8)
+    assert c8["k"].dtype == jnp.int8 and "k_scale" in c8
+
+    _, quant = _build("qwen3_8b+w4a8")
+    cf = quant.init_cache(1, 64, kv_dtype=jnp.float32)
+    assert cf["k"].dtype == jnp.float32 and "k_scale" not in cf
+
+
+def test_init_cache_int8_ring_shapes():
+    """+ring+w4a8: the ring cache stores int8 rows over R ring rows and the
+    scale planes tile the same R axis (one scale per ring row per head)."""
+    cfg, model = _build("h2o_danube_1p8b+ring+w4a8")
+    cache = model.init_cache(2, 256)
+    l, b, rows, hkv, _ = cache["k"].shape
+    assert cache["k"].dtype == jnp.int8
+    assert cache["k_scale"].shape == (l, b, hkv, rows)
+    assert rows < 256      # ring: R = window-derived rows, not max_len
